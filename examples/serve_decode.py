@@ -1,0 +1,39 @@
+"""End-to-end serving driver (the paper's kind of workload): batched
+requests -> prefill -> decode loop with FD top-k sampling over the
+model-sharded vocabulary, comparing FD vs the CN/CN* baselines.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch qwen2-0.5b]
+      (adds 8 fake host devices so the model axis is real)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--model-par", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.launch import serve as serve_mod
+    for alg in ("fd", "cn", "cn_star"):
+        sys.argv = ["serve", "--arch", args.arch, "--smoke",
+                    "--batch", str(args.batch),
+                    "--prompt-len", str(args.prompt_len),
+                    "--gen", str(args.gen),
+                    "--model-par", str(args.model_par),
+                    "--algorithm", alg]
+        t0 = time.time()
+        serve_mod.main()
+        print(f"  -> {alg} end-to-end {time.time() - t0:.1f}s\n")
+
+
+if __name__ == "__main__":
+    main()

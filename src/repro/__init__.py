@@ -1,0 +1,2 @@
+"""repro — FD (fully-distributed top-k) TPU framework."""
+__version__ = "0.1.0"

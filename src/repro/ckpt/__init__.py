@@ -1,0 +1,3 @@
+from repro.ckpt.checkpoint import (  # noqa: F401
+    CheckpointManager, latest_step, restore, save)
+from repro.ckpt.elastic import reshard_tree  # noqa: F401

@@ -1,0 +1,51 @@
+"""Elastic re-meshing: restore / reshard state onto a changed device count.
+
+The paper's churn handling at the granularity where TPU systems actually
+churn — hosts/pods, between steps.  Checkpoints are device-layout-free
+(global np arrays), so elasticity is: build the new mesh, recompute the
+partition specs for the same parameter tree, device_put.
+
+``shrink_data_axis`` picks the largest power-of-two data axis that fits
+the surviving device count (the model axis is fixed by the parallelism
+plan; losing model-axis peers requires restoring on a smaller model axis,
+which the same machinery handles as long as divisibility holds).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.optim.sharding import param_specs
+
+
+def largest_pow2_leq(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def make_elastic_mesh(n_devices: int, model_size: int,
+                      devices=None) -> Mesh:
+    """(data, model) mesh with data = largest power of two that fits."""
+    if devices is None:
+        devices = jax.devices()[:n_devices]
+    data = largest_pow2_leq(len(devices) // model_size)
+    if data < 1:
+        raise ValueError(
+            f"{len(devices)} devices cannot host model axis {model_size}")
+    import numpy as np
+    arr = np.array(devices[:data * model_size]).reshape(data, model_size)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_tree(tree: Any, cfg, new_mesh: Mesh,
+                 specs: Optional[Any] = None) -> Any:
+    """Move a (possibly host-resident) pytree onto ``new_mesh``."""
+    if specs is None:
+        specs = param_specs(tree, cfg, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        tree, specs)

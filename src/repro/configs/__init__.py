@@ -1,0 +1,12 @@
+from repro.configs.base import (  # noqa: F401
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RecurrentConfig,
+    SHAPES,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    shape_applicable,
+    smoke_config,
+)

@@ -1,0 +1,214 @@
+"""FD — fully-distributed top-k over a sharded score axis.
+
+The paper's four phases, mapped to a TPU mesh axis (devices = peers):
+
+  1. query forward     — implicit: the jitted program *is* the query; every
+                         device already holds it (compile-time flooding,
+                         each "edge" used zero times at runtime — stronger
+                         than Strategy 1+2's once-per-edge).
+  2. local execution   — ``local_topk`` over the device's score shard
+                         (Pallas kernel on TPU).
+  3. merge-and-backward— log2(n) ppermute rounds merging (score, index)
+                         k-lists along a halving tree (device 0 =
+                         query originator), doubling butterfly, or ring.
+  4. data retrieval    — fetch only the k winning rows from their owners
+                         (masked psum — at most k items cross the network,
+                         the paper's m_rt <= 2k).
+
+Baselines (paper §5.1):
+  * CN  — every peer ships its *full* local data to the originator
+          (all-gather of the raw scores).
+  * CN* — every peer ships only its local k-list to the originator
+          (all-gather of k-lists, merge at the root).
+
+All functions with the ``_shard`` suffix must be called inside
+``jax.shard_map``; the plain versions wrap them given a mesh + axis name.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import topology
+from repro.core.scorelist import empty_scorelist
+from repro.kernels.merge import merge_scorelists
+from repro.kernels.topk import local_topk
+
+
+# --------------------------------------------------------------------------
+# In-shard_map collective top-k
+# --------------------------------------------------------------------------
+
+def fd_topk_shard(local_scores: jax.Array, k: int, axis_name: str,
+                  axis_size: int, *, schedule: str = "halving",
+                  use_pallas: bool = False) -> tuple:
+    """Global top-k of a score axis sharded over ``axis_name``.
+
+    local_scores: (..., n_local) on each device; global index of local
+    column j is ``axis_index * n_local + j``.
+
+    Returns (vals, idx): (..., k), identical on every device.
+    """
+    n_local = local_scores.shape[-1]
+    ax = jax.lax.axis_index(axis_name)
+
+    # Phase 2: local query execution.
+    vals, idx = local_topk(local_scores, k, use_pallas=use_pallas)
+    idx = idx + (ax * n_local).astype(jnp.int32)
+
+    # Phase 3: merge-and-backward.
+    if schedule == "doubling":
+        for perm in topology.doubling_rounds(axis_size):
+            pv = jax.lax.ppermute(vals, axis_name, perm)
+            pi = jax.lax.ppermute(idx, axis_name, perm)
+            vals, idx = merge_scorelists(vals, idx, pv, pi)
+        return vals, idx
+
+    if schedule == "halving":
+        for perm, receivers in topology.halving_rounds(axis_size):
+            pv = jax.lax.ppermute(vals, axis_name, perm)
+            pi = jax.lax.ppermute(idx, axis_name, perm)
+            # non-receivers got zeros; mask them to -inf so merge is a no-op
+            recv = jnp.isin(ax, jnp.asarray(sorted(receivers)))
+            pv = jnp.where(recv, pv, -jnp.inf)
+            pi = jnp.where(recv, pi, -1)
+            vals, idx = merge_scorelists(vals, idx, pv, pi)
+        # device 0 (query originator) now holds the final score-list;
+        # broadcast it (the retrieval-phase "ask" fan-out).
+        vals = jax.lax.psum(jnp.where(ax == 0, vals, 0.0), axis_name)
+        idx = jax.lax.psum(jnp.where(ax == 0, idx, 0), axis_name)
+        return vals, idx
+
+    if schedule == "ring":
+        # relay each peer's ORIGINAL k-list around the ring; merging the
+        # accumulator would re-introduce duplicates of already-seen lists.
+        relay_v, relay_i = vals, idx
+        for perm in topology.ring_rounds(axis_size):
+            relay_v = jax.lax.ppermute(relay_v, axis_name, perm)
+            relay_i = jax.lax.ppermute(relay_i, axis_name, perm)
+            vals, idx = merge_scorelists(vals, idx, relay_v, relay_i)
+        return vals, idx
+
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def cn_topk_shard(local_scores: jax.Array, k: int, axis_name: str) -> tuple:
+    """CN baseline: all-gather the full scores, top-k locally."""
+    full = jax.lax.all_gather(local_scores, axis_name, axis=-1, tiled=True)
+    return local_topk(full, k)
+
+
+def cn_star_topk_shard(local_scores: jax.Array, k: int, axis_name: str,
+                       axis_size: int) -> tuple:
+    """CN* baseline: all-gather only the k-lists, merge locally."""
+    n_local = local_scores.shape[-1]
+    ax = jax.lax.axis_index(axis_name)
+    vals, idx = local_topk(local_scores, k)
+    idx = idx + (ax * n_local).astype(jnp.int32)
+    all_v = jax.lax.all_gather(vals, axis_name, axis=-1, tiled=True)  # (...,k*n)
+    all_i = jax.lax.all_gather(idx, axis_name, axis=-1, tiled=True)
+    mv, pos = jax.lax.top_k(all_v, k)
+    mi = jnp.take_along_axis(all_i, pos, axis=-1)
+    return mv, mi
+
+
+def fd_topk_gather_shard(local_scores: jax.Array, local_rows: jax.Array,
+                         k: int, axis_name: str, axis_size: int, *,
+                         schedule: str = "halving") -> tuple:
+    """Phases 2-4 over a sharded table: return the k winning *rows*.
+
+    local_scores: (n_local,), local_rows: (n_local, d).  Only k rows cross
+    the network (phase 4 = masked psum), vs CN's n_local * n rows.
+    Returns (vals (k,), idx (k,), rows (k, d)).
+    """
+    n_local = local_scores.shape[-1]
+    ax = jax.lax.axis_index(axis_name)
+    vals, idx = fd_topk_shard(local_scores, k, axis_name, axis_size,
+                              schedule=schedule)
+    # Phase 4: data retrieval — each winner row is contributed by its owner.
+    owner = idx // n_local
+    local_pos = jnp.clip(idx - ax * n_local, 0, n_local - 1)
+    rows = jnp.take(local_rows, local_pos, axis=0)          # (k, d)
+    mask = (owner == ax)[:, None].astype(local_rows.dtype)
+    rows = jax.lax.psum(rows * mask, axis_name)
+    return vals, idx, rows
+
+
+# --------------------------------------------------------------------------
+# Mesh-level wrappers
+# --------------------------------------------------------------------------
+
+def fd_topk(scores: jax.Array, k: int, mesh, axis: str = "model", *,
+            schedule: str = "halving", algorithm: str = "fd",
+            use_pallas: bool = False, batch_axes=None) -> tuple:
+    """Global top-k of ``scores`` (..., N) sharded over mesh axis ``axis``.
+
+    algorithm: "fd" | "cn" | "cn_star".
+    ``batch_axes``: mesh axes the leading (batch) dim is sharded over —
+    collectives then run only over ``axis`` within each batch shard.
+    Returns (vals, idx) of shape (..., k), replicated over ``axis``.
+    """
+    n = scores.shape[-1]
+    axis_size = dict(mesh.shape)[axis]
+    if n % axis_size:
+        raise ValueError(f"score dim {n} not divisible by axis {axis_size}")
+    ndim = scores.ndim
+    lead = [None] * (ndim - 1)
+    if batch_axes and ndim > 1:
+        present = tuple(a for a in batch_axes if a in mesh.axis_names)
+        if present and scores.shape[0] % math.prod(
+                dict(mesh.shape)[a] for a in present) == 0:
+            lead[0] = present
+    in_spec = P(*(lead + [axis]))
+    out_spec = P(*(lead + [None]))
+
+    def fn(local):
+        if algorithm == "fd":
+            return fd_topk_shard(local, k, axis, axis_size,
+                                 schedule=schedule, use_pallas=use_pallas)
+        if algorithm == "cn":
+            return cn_topk_shard(local, k, axis)
+        if algorithm == "cn_star":
+            return cn_star_topk_shard(local, k, axis, axis_size)
+        raise ValueError(algorithm)
+
+    return jax.shard_map(fn, mesh=mesh, in_specs=(in_spec,),
+                         out_specs=(out_spec, out_spec),
+                         check_vma=False)(scores)
+
+
+def fd_topk_gather(scores: jax.Array, rows: jax.Array, k: int, mesh,
+                   axis: str = "model", *, schedule: str = "halving") -> tuple:
+    """Top-k rows of a sharded (N, d) table by sharded (N,) scores."""
+    axis_size = mesh.shape[axis]
+    out = P(None)
+    return jax.shard_map(
+        functools.partial(fd_topk_gather_shard, k=k, axis_name=axis,
+                          axis_size=axis_size, schedule=schedule),
+        mesh=mesh,
+        in_specs=(P(axis), P(axis, None)),
+        out_specs=(out, out, P(None, None)),
+        check_vma=False)(scores, rows)
+
+
+# --------------------------------------------------------------------------
+# Communication model (for EXPERIMENTS.md tables; matches paper §3.2)
+# --------------------------------------------------------------------------
+
+def comm_bytes(algorithm: str, n_dev: int, n_local: int, k: int,
+               schedule: str = "halving", elem_bytes: int = 4) -> int:
+    """Total bytes crossing links for one top-k query over n_dev shards."""
+    if algorithm == "cn":
+        return topology.allgather_bytes(n_dev, n_local, elem_bytes)
+    if algorithm == "cn_star":
+        return topology.allgather_bytes(n_dev, k, 8)
+    if algorithm == "fd":
+        merge = topology.schedule_list_bytes(schedule, n_dev, k)
+        bcast = k * 8 * (n_dev - 1) if schedule == "halving" else 0
+        return merge + bcast
+    raise ValueError(algorithm)

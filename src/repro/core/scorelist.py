@@ -1,0 +1,26 @@
+"""Score-lists: the paper's unit of communication.
+
+A score-list is a fixed-size list of k (score, address) couples, descending
+by score.  On TPU: (f32 values, i32 global indices) arrays whose last axis
+is k.  ``ENTRY_BYTES`` mirrors the paper's L=10 analysis (we use 4+4).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.merge import merge_ref, merge_scorelists  # noqa: F401
+from repro.kernels.topk import local_topk  # noqa: F401
+
+ENTRY_BYTES = 8  # f32 score + i32 global index (paper: 4 B score + 6 B addr)
+
+
+def empty_scorelist(shape_prefix: tuple, k: int):
+    """An all-(-inf) score-list — the identity element of merge."""
+    vals = jnp.full(shape_prefix + (k,), -jnp.inf, jnp.float32)
+    idx = jnp.full(shape_prefix + (k,), -1, jnp.int32)
+    return vals, idx
+
+
+def scorelist_bytes(k: int, n_lists: int = 1) -> int:
+    """b = k * L * n  (paper §3.2: b_bw = k*L*(|P_Q|-1))."""
+    return k * ENTRY_BYTES * n_lists

@@ -1,0 +1,81 @@
+"""Collective schedules: the TPU-native analogue of the paper's overlay.
+
+The paper bubbles score-lists up a spanning tree of the (unstructured)
+overlay; Strategies 1+2 ensure each edge carries the query once.  On a TPU
+mesh we can pick the tree at compile time.  Three schedules are provided:
+
+  * ``halving``   — recursive halving: the paper's merge-and-backward, with
+                    device 0 as the query originator.  log2(n) rounds; a
+                    link is used at most once per round and the total number
+                    of list transfers is n-1 — the paper's Lemma 2 lower
+                    bound (one message per non-originator peer).
+  * ``doubling``  — recursive doubling (butterfly): every device ends with
+                    the global top-k (no broadcast needed); n*log2(n)
+                    transfers.
+  * ``ring``      — n-1 rounds around a ring; n*(n-1) transfers but only
+                    nearest-neighbour links (torus-friendly).
+
+Each round is a `jax.lax.ppermute` permutation; `*_rounds(n)` return the
+(src, dst) pair lists plus a per-device activity mask for merging.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.scorelist import ENTRY_BYTES
+
+SCHEDULES = ("halving", "doubling", "ring")
+
+
+def _log2(n: int) -> int:
+    l = int(math.log2(n))
+    if 2 ** l != n:
+        raise ValueError(f"axis size {n} must be a power of two")
+    return l
+
+
+def doubling_rounds(n: int):
+    """[(perm, None)] — every device both sends and merges each round."""
+    return [[(i, i ^ (1 << r)) for i in range(n)] for r in range(_log2(n))]
+
+
+def halving_rounds(n: int):
+    """[(perm, receiver_set)] — bubble-up to originator (device 0).
+
+    Round r: devices with idx % 2^(r+1) == 2^r send their list to
+    idx - 2^r; only receivers merge.
+    """
+    rounds = []
+    for r in range(_log2(n)):
+        step = 1 << r
+        senders = [i for i in range(n) if i % (2 * step) == step]
+        perm = [(i, i - step) for i in senders]
+        receivers = {i - step for i in senders}
+        rounds.append((perm, receivers))
+    return rounds
+
+
+def ring_rounds(n: int):
+    return [[(i, (i + 1) % n) for i in range(n)] for _ in range(n - 1)]
+
+
+def schedule_transfers(schedule: str, n: int) -> int:
+    """Number of k-list point-to-point transfers (paper's m_bw analogue)."""
+    if schedule == "halving":
+        return n - 1                      # == Lemma 2 lower bound
+    if schedule == "doubling":
+        return n * _log2(n)
+    if schedule == "ring":
+        return n * (n - 1)
+    raise ValueError(schedule)
+
+
+def schedule_list_bytes(schedule: str, n: int, k: int,
+                        entry_bytes: int = ENTRY_BYTES) -> int:
+    """Total bytes moved by the merge phase (all links summed)."""
+    return schedule_transfers(schedule, n) * k * entry_bytes
+
+
+def allgather_bytes(n: int, shard_elems: int, elem_bytes: int) -> int:
+    """Total bytes for a ring all-gather of per-device shards (CN/CN*)."""
+    return n * (n - 1) * shard_elems * elem_bytes

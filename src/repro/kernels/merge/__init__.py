@@ -1,0 +1,3 @@
+from repro.kernels.merge.merge import merge_pallas  # noqa: F401
+from repro.kernels.merge.ops import merge_scorelists  # noqa: F401
+from repro.kernels.merge.ref import merge_ref  # noqa: F401

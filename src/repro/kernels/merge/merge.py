@@ -1,0 +1,115 @@
+"""Score-list merge Pallas TPU kernel (Merge-and-Backward phase).
+
+Merges two descending k-lists into the top-k of their union using a
+bitonic merge network: since ``concat(a, reverse(b))`` is bitonic, the
+first k outputs of a bitonic sorting network of size 2k are obtained in
+log2(2k) compare-exchange stages — O(k log k) work, fully vectorized,
+no data-dependent control flow (MXU-free, pure VPU ops).
+
+Both lists live entirely in VMEM (k is tiny: 8..256); the batch dim is the
+grid.  Validated against ref.merge_ref in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _bitonic_descending(v, i):
+    """Full bitonic sort (descending) of (1, m) rows, m a power of two.
+
+    Implemented with static stage/substage loops (log^2 m compare-exchange
+    layers); each layer is a pair of where-selects over lane-shuffled copies
+    — Mosaic-friendly, no gathers.
+    """
+    m = v.shape[1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+    size = 2
+    while size <= m:
+        stride = size // 2
+        while stride >= 1:
+            partner = lanes ^ stride
+            pv = _lane_swap(v, stride, m)
+            pi = _lane_swap(i, stride, m)
+            is_lo = (lanes & stride) == 0
+            # direction: descending when the size-block index is even
+            asc_block = (lanes & size) != 0
+            # keep max at lo for descending blocks, min at lo for ascending
+            take_max = jnp.logical_xor(is_lo, asc_block)
+            gt = v > pv
+            eq = v == pv
+            lower_idx = lanes < partner
+            # stable-ish tie-break: prefer element from lower lane
+            win = jnp.where(eq, lower_idx, gt)
+            keep = jnp.where(take_max, win, ~win)
+            v = jnp.where(keep, v, pv)
+            i = jnp.where(keep, i, pi)
+            stride //= 2
+        size *= 2
+    return v, i
+
+
+def _lane_swap(x, stride: int, m: int):
+    """x with lanes permuted by XOR(stride) — via reshape/flip, no gather."""
+    assert m % (2 * stride) == 0
+    y = x.reshape((-1, m // (2 * stride), 2, stride))
+    y = jnp.flip(y, axis=2)
+    return y.reshape(x.shape)
+
+
+def _merge_kernel(va_ref, ia_ref, vb_ref, ib_ref, vo_ref, io_ref, *,
+                  k: int, m: int):
+    va = va_ref[...].astype(jnp.float32)
+    ia = ia_ref[...]
+    vb = vb_ref[...].astype(jnp.float32)
+    ib = ib_ref[...]
+    pad = m // 2 - k
+    if pad:
+        va = jnp.pad(va, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        ia = jnp.pad(ia, ((0, 0), (0, pad)), constant_values=-1)
+        vb = jnp.pad(vb, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        ib = jnp.pad(ib, ((0, 0), (0, pad)), constant_values=-1)
+    v = jnp.concatenate([va, vb], axis=1)
+    i = jnp.concatenate([ia, ib], axis=1)
+    v, i = _bitonic_descending(v, i)
+    vo_ref[...] = v[:, :k]
+    io_ref[...] = i[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_pallas(vals_a, idx_a, vals_b, idx_b, *, interpret: bool = True):
+    """Merge two descending k-lists -> top-k of the union (descending)."""
+    lead = vals_a.shape[:-1]
+    k = vals_a.shape[-1]
+    m = 2 * _next_pow2(k)
+    va = vals_a.reshape((-1, k))
+    b = va.shape[0]
+    args = [va, idx_a.reshape((-1, k)), vals_b.reshape((-1, k)),
+            idx_b.reshape((-1, k))]
+    kern = functools.partial(_merge_kernel, k=k, m=m)
+    spec = pl.BlockSpec((1, k), lambda i: (i, 0))
+    vo, io = pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[spec] * 4,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+    return vo.reshape(lead + (k,)), io.reshape(lead + (k,))

@@ -1,0 +1,13 @@
+"""jit'd public wrapper for the score-list merge kernel."""
+from __future__ import annotations
+
+from repro.kernels.merge.merge import merge_pallas
+from repro.kernels.merge.ref import merge_ref
+
+
+def merge_scorelists(vals_a, idx_a, vals_b, idx_b, *, use_pallas: bool = False,
+                     interpret: bool = True):
+    """Merge-and-Backward: top-k of the union of two descending k-lists."""
+    if use_pallas:
+        return merge_pallas(vals_a, idx_a, vals_b, idx_b, interpret=interpret)
+    return merge_ref(vals_a, idx_a, vals_b, idx_b)

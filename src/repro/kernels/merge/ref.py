@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the score-list merge kernel.
+
+The paper's Merge-and-Backward phase: a peer merges the k-lists received
+from its children with its own local k-list and keeps the k best couples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_ref(vals_a, idx_a, vals_b, idx_b, k: int | None = None):
+    """Merge two descending (vals, idx) k-lists along the last axis.
+
+    Returns the top-k of the union, descending.  Ties are broken in favour
+    of list ``a`` then lower position (stable lax.top_k over the concat).
+    """
+    if k is None:
+        k = vals_a.shape[-1]
+    v = jnp.concatenate([vals_a, vals_b], axis=-1).astype(jnp.float32)
+    i = jnp.concatenate([idx_a, idx_b], axis=-1)
+    mv, pos = jax.lax.top_k(v, k)
+    mi = jnp.take_along_axis(i, pos, axis=-1)
+    return mv, mi.astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.kernels.topk.ops import local_topk  # noqa: F401
+from repro.kernels.topk.ref import topk_ref  # noqa: F401
+from repro.kernels.topk.topk import topk_pallas  # noqa: F401

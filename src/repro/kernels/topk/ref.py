@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the blocked local top-k kernel.
+
+The paper's "Local Query Execution" phase: each peer scores its local data
+items and keeps the k best (score, address) couples.  On TPU the "peer" is a
+device and the "local data" a shard of scores (e.g. a vocab shard of logits);
+the address is the global row index.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ref(scores: jax.Array, k: int, index_offset: int = 0):
+    """Top-k values and *global* indices of ``scores`` along the last axis.
+
+    Args:
+      scores: (..., n) array.
+      k: number of winners, k <= n.
+      index_offset: added to local indices to form global "addresses".
+
+    Returns:
+      (vals, idx): (..., k) descending values and int32 global indices.
+      Ties broken by lowest index (lax.top_k semantics).
+    """
+    vals, idx = jax.lax.top_k(scores.astype(jnp.float32), k)
+    return vals, (idx + index_offset).astype(jnp.int32)

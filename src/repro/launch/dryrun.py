@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh).
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices build the production meshes
+(16×16 single-pod, 2×16×16 multi-pod); every cell must lower, SPMD-
+partition, and compile.  ``memory_analysis()`` proves the per-device
+footprint, ``cost_analysis()`` + the HLO collective parser feed the
+roofline table (EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, get_config,
+                                list_archs, shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.optim.sharding import (batch_axes, decode_state_specs,
+                                  input_specs_pytree, opt_state_specs,
+                                  param_specs)
+from repro.roofline.analysis import (HW, model_flops_estimate,
+                                     roofline_terms)
+from repro.roofline.hlo_parse import analyze as hlo_analyze
+from repro.runtime.steps import (make_prefill_step, make_serve_step,
+                                 make_train_step)
+
+DEFAULT_OUT = "artifacts/dryrun"
+ACT_BUDGET_BYTES = 4 * 2 ** 30      # boundary-activation budget per device
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation, weak-type clean)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model inputs for a cell (tokens/labels + modality stubs)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        toks = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        out = {"tokens": toks}
+        return out
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.mrope_sections is not None:
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, min(256, s), cfg.d_model), jnp.float32)
+    return out
+
+
+def pick_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Smallest power-of-two microbatch count keeping per-device layer-
+    boundary activations under ACT_BUDGET_BYTES (scan + full remat)."""
+    mesh_shape = dict(mesh.shape)
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    per_dev = max(shape.global_batch // dp, 1)
+    n_layers = cfg.n_layers + cfg.n_encoder_layers
+    bnd = per_dev * shape.seq_len * cfg.d_model * 2 * n_layers
+    m = 1
+    while bnd // m > ACT_BUDGET_BYTES and m < per_dev:
+        m *= 2
+    return m
+
+
+# --------------------------------------------------------------------------
+# one cell
+# --------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             hw: HW = HW(), verbose: bool = True,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k needs sub-quadratic decode state "
+                          "(ssm/hybrid only) — DESIGN.md §5"}
+    overrides = overrides or {}
+    if "chunk_size" in overrides and cfg.recurrent is not None:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, recurrent=_dc.replace(
+            cfg.recurrent, chunk_size=overrides["chunk_size"]))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_shape = dict(mesh.shape)
+    baxes = batch_axes(mesh_shape)
+    t0 = time.time()
+
+    max_seq = shape.seq_len if shape.kind != "decode" else shape.seq_len
+    params_abs = jax.eval_shape(
+        lambda k: M.init_params(k, cfg, max_seq=max(max_seq, 4096)),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = param_specs(params_abs, cfg, mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    batch_abs = input_specs(cfg, shape)
+    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          input_specs_pytree(batch_abs, mesh))
+
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": ("2x16x16" if multi_pod else "16x16"),
+              "kind": shape.kind, "skipped": False}
+
+    # the mesh context makes every with_sharding_constraint in the model
+    # real during tracing (without it they are silent no-ops and SPMD
+    # propagation is free to replicate activations)
+    mesh_ctx = jax.sharding.set_mesh(mesh)
+    mesh_ctx.__enter__()
+    if shape.kind == "train":
+        microbatches = overrides.get(
+            "microbatches", pick_microbatches(cfg, shape, mesh))
+        record["microbatches"] = microbatches
+        opt_abs = jax.eval_shape(
+            functools.partial(adamw_init, cfg=AdamWConfig()), params_abs)
+        ospecs = opt_state_specs(params_abs, cfg, mesh)
+        oshard = type(opt_abs)(
+            NamedSharding(mesh, P()),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs))
+        step = make_train_step(
+            cfg, AdamWConfig(), microbatches=microbatches,
+            remat=overrides.get("remat", "full"), batch_axes=baxes,
+            q_block=overrides.get("q_block", 1024),
+            kv_block=overrides.get("kv_block", 1024),
+            acc_specs=(jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                    ospecs)
+                       if microbatches > 1 else None))
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(
+            cfg, q_block=overrides.get("q_block", 1024),
+            kv_block=overrides.get("kv_block", 1024))
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        state_abs = jax.eval_shape(
+            functools.partial(M.init_decode_state, cfg,
+                              batch=shape.global_batch,
+                              s_max=shape.seq_len),)
+        sspecs = decode_state_specs(state_abs, cfg, mesh,
+                                    s_max=shape.seq_len)
+        sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs)
+        step = make_serve_step(
+            cfg, mesh, k=overrides.get("k", 20),
+            algorithm=overrides.get("algorithm", "fd"),
+            schedule=overrides.get("schedule", "halving"),
+            batch_axes=baxes)
+        toks_abs = input_specs(cfg, shape)["tokens"]
+        rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, sshard,
+                                       NamedSharding(
+                                           mesh,
+                                           input_specs_pytree(
+                                               {"t": toks_abs},
+                                               mesh)["t"]),
+                                       NamedSharding(mesh, P())),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_abs, state_abs, toks_abs, rng_abs)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    mesh_ctx.__exit__(None, None, None)
+    t_compile = time.time() - t0 - t_lower
+    record.update(t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1))
+
+    # ---- analysis -------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        args_b = record["memory"].get("argument_size_in_bytes", 0)
+        temp_b = record["memory"].get("temp_size_in_bytes", 0)
+        record["memory"]["per_device_total_gib"] = round(
+            (args_b + temp_b) / 2 ** 30, 3)
+    except Exception as e:                                     # noqa: BLE001
+        record["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        record["xla_cost_analysis"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "note": "counts scan bodies ONCE - see hlo_parse totals"}
+    except Exception as e:                                     # noqa: BLE001
+        record["xla_cost_analysis"] = {"error": str(e)}
+    try:
+        # trip-count-weighted totals from the per-device SPMD module
+        totals = hlo_analyze(compiled.as_text())
+        record["flops"] = totals.flops
+        record["hlo_bytes"] = totals.bytes_accessed
+        record["convert_bytes_cpu_artifact"] = totals.convert_bytes
+        record["collective"] = {
+            "total": totals.collective_bytes,
+            "by_op": totals.coll_by_op,
+            "counts": totals.coll_counts}
+        record["while_trip_counts"] = totals.trip_counts
+    except Exception as e:                                     # noqa: BLE001
+        record["flops"], record["hlo_bytes"] = 0.0, 0.0
+        record["collective"] = {"total": 0, "error": str(e)}
+
+    chips = 512 if multi_pod else 256
+    mf = model_flops_estimate(cfg, shape, mode=shape.kind)
+    terms = roofline_terms(
+        hlo_flops=record["flops"], hlo_bytes=record["hlo_bytes"],
+        collective_bytes=record["collective"].get("total", 0),
+        hw=hw, model_flops=mf, chips=chips)
+    record["roofline"] = terms
+    if verbose:
+        print(f"[{record['mesh']}] {arch} × {shape_name}: "
+              f"compile {t_compile:.0f}s  "
+              f"mem/dev {record['memory'].get('per_device_total_gib', '?')} GiB  "
+              f"compute {terms['compute_s']:.3e}s mem {terms['memory_s']:.3e}s "
+              f"coll {terms['collective_s']:.3e}s → {terms['dominant']}  "
+              f"roofline {terms.get('roofline_frac', 0):.1%}")
+    return record
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", dest="mp", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    cells = []
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.mp]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp)
+                except Exception as e:                         # noqa: BLE001
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"FAIL {tag}: {e}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                cells.append(rec)
+    ok = sum(1 for c in cells if not c.get("error") and not c.get("skipped"))
+    sk = sum(1 for c in cells if c.get("skipped"))
+    print(f"\ndry-run: {ok} compiled, {sk} skipped (structural), "
+          f"{failures} failed, artifacts in {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

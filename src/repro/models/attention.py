@@ -1,0 +1,428 @@
+"""Attention token mixers: GQA (+QKV bias, M-RoPE, sliding window), MLA,
+and encoder/cross attention — all built on one blocked online-softmax core
+(pure-JAX flash) so 32k-token prefill compiles with bounded memory.
+
+Shapes follow (B, S, H, Dh); KV caches are (B, S_max, H_kv, Dh) per layer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (MODEL_AXIS, batch_spec, constrain,
+                                 dense_init, norm_init, apply_norm)
+from repro.models.layers import head_axis as L_head_axis
+from repro.models.rope import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# blocked online-softmax attention core
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset=0, kv_valid_len=None,
+                    q_block: int = 1024, kv_block: int = 1024):
+    """Blocked attention with online softmax (grouped-query aware).
+
+    q: (B, Sq, Hq, Dq); k: (B, Sk, Hkv, Dq); v: (B, Sk, Hkv, Dv);
+    Hq must be a multiple of Hkv.  ``q_offset`` is the absolute position of
+    q[0] (scalar or traced), for causal/window masks in decode and chunked
+    prefill.  ``kv_valid_len``: mask out k positions >= this (decode caches).
+
+    Returns (B, Sq, Hq, Dv) in q.dtype.
+    """
+    b, sq, hq, dq = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = dq ** -0.5
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    # pad to block multiples
+    sq_p = -(-sq // q_block) * q_block
+    sk_p = -(-sk // kv_block) * kv_block
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    if kv_valid_len is None:
+        kv_valid_len = sk
+    nq, nk = sq_p // q_block, sk_p // kv_block
+
+    # (B, S, H, D) -> (nq, B, Hkv, G, q_block, D)
+    qb = q.reshape(b, nq, q_block, hkv, g, dq).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nk, kv_block, hkv, dq).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, kv_block, hkv, dv).transpose(1, 0, 3, 2, 4)
+    # UNEVEN head sharding over the model axis (GSPMD pads the ragged
+    # shard): when q-heads can't shard evenly (phi3 40H, whisper 20H,
+    # minicpm3 40H, qwen2 14H over TP=16), sharding hkv raggedly beats
+    # replicating the whole attention computation on every model rank
+    # (12x memory on minicpm3-4b x prefill_32k; EXPERIMENTS.md §Perf
+    # bonus).  hkv is a whole dim of every block tensor, so no reshape
+    # ever splits it.  Archs with even q-head TP keep their layout.
+    if hkv > 1 and L_head_axis(hq) is None:
+        qb = constrain(qb, None, batch_spec(), MODEL_AXIS, None, None, None)
+        kb = constrain(kb, None, batch_spec(), MODEL_AXIS, None, None)
+        vb = constrain(vb, None, batch_spec(), MODEL_AXIS, None, None)
+
+    def per_q_block(args):
+        qi, q_idx = args                       # (B,Hkv,G,Bq,Dq), scalar
+        q_pos = q_offset + q_idx * q_block + jnp.arange(q_block)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, args2):
+            # checkpointed: backward recomputes s/p per block instead of
+            # saving the (B,Hkv,G,Bq,Bk) probabilities — this is what makes
+            # the pure-JAX flash actually O(S) memory under autodiff.
+            m, l, acc = carry
+            ki, vi, k_idx = args2              # (B,Hkv,Bk,Dq), (B,Hkv,Bk,Dv)
+            k_pos = k_idx * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            mask = k_pos[None, :] < kv_valid_len
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            new_m = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - new_m[..., None])
+            # fully-masked blocks: s == new_m == NEG_INF -> exp(0); zero them
+            p = p * mask[None, None, None]
+            corr = jnp.exp(m - new_m)
+            l2 = l * corr + jnp.sum(p, axis=-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32))
+            return (new_m, l2, acc2), None
+
+        m0 = jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(per_q_block, (qb, jnp.arange(nq)))
+    # (nq, B, Hkv, G, Bq, Dv) -> (B, Sq, Hq, Dv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq_p, hq, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention (covers MHA, MQA, local-window, M-RoPE, cross-attn)
+# --------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {"w_q": dense_init(ks[0], d, nq * hd, dtype),
+         "w_k": dense_init(ks[1], d, nkv * hd, dtype),
+         "w_v": dense_init(ks[2], d, nkv * hd, dtype),
+         "w_o": dense_init(ks[3], nq * hd, d, dtype, scale=(nq * hd) ** -0.5)}
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((nq * hd,), dtype)
+        p["b_k"] = jnp.zeros((nkv * hd,), dtype)
+        p["b_v"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, H_kv, Dh)
+    v: jax.Array
+
+
+def gqa_attention(params, x, cfg, *, positions, mode: str,
+                  cache: Optional[KVCache] = None, cache_pos=None,
+                  kv_source=None, window: int = 0,
+                  q_block: int = 1024, kv_block: int = 1024):
+    """GQA attention for train/prefill/decode (+cross when kv_source given).
+
+    x: (B, S, D).  positions: (B, S) or (3, B, S) for M-RoPE.
+    decode mode: S == 1, cache holds S_max slots, cache_pos is the write
+    position (scalar int32).
+    Returns (y, new_cache).
+    """
+    b, s, d = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    is_cross = kv_source is not None
+
+    q = x @ params["w_q"]
+    if "b_q" in params:
+        q = q + params["b_q"]
+    q = q.reshape(b, s, nq, hd)
+
+    kv_in = kv_source if is_cross else x
+    k = kv_in @ params["w_k"]
+    v = kv_in @ params["w_v"]
+    if "b_k" in params:
+        k, v = k + params["b_k"], v + params["b_v"]
+    k = k.reshape(b, kv_in.shape[1], nkv, hd)
+    v = v.reshape(b, kv_in.shape[1], nkv, hd)
+
+    if not is_cross and cfg.pos_kind == "rope":
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if mode == "decode" and not is_cross:
+        assert cache is not None
+        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                          (0, cache_pos, 0, 0))
+        new_cache = KVCache(ck, cv)
+        k, v = ck, cv
+        q_offset = cache_pos
+        kv_valid = cache_pos + 1
+        causal = False  # enforced via kv_valid
+    elif mode == "decode" and is_cross:
+        # cross-attn decode: reuse precomputed encoder KV from the cache
+        assert cache is not None
+        k, v = cache.k, cache.v
+        new_cache = cache
+        q_offset, kv_valid, causal = 0, None, False
+    else:
+        q_offset = 0
+        kv_valid = None
+        causal = (mode != "encode") and not is_cross
+        if mode == "prefill" and not is_cross:
+            new_cache = KVCache(k, v)
+        elif is_cross:
+            new_cache = KVCache(k, v)
+
+    hax = L_head_axis(nq)
+    q = constrain(q, batch_spec(), None, hax, None)
+    if hax is not None:
+        kvax = L_head_axis(nkv) if not is_cross else None
+        k = constrain(k, batch_spec(), None, kvax, None)
+        v = constrain(v, batch_spec(), None, kvax, None)
+    y = flash_attention(q, k, v, causal=causal,
+                        window=window if not is_cross else 0,
+                        q_offset=q_offset, kv_valid_len=kv_valid,
+                        q_block=q_block, kv_block=kv_block)
+    y = y.reshape(b, s, nq * hd)
+    return y @ params["w_o"], new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2)
+# --------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": norm_init(m.q_lora_rank, "rms", dtype),
+        "w_uq": dense_init(ks[1], m.q_lora_rank,
+                           h * (m.qk_nope_dim + m.qk_rope_dim), dtype),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_dim, dtype),
+        "kv_norm": norm_init(m.kv_lora_rank, "rms", dtype),
+        "w_uk": dense_init(ks[3], m.kv_lora_rank, h * m.qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "w_o": dense_init(ks[5], h * m.v_head_dim, d, dtype,
+                          scale=(h * m.v_head_dim) ** -0.5),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # (B, S_max, kv_lora_rank)
+    k_rope: jax.Array     # (B, S_max, qk_rope_dim)
+
+
+def mla_attention(params, x, cfg, *, positions, mode: str,
+                  cache: Optional[MLACache] = None, cache_pos=None,
+                  q_block: int = 1024, kv_block: int = 1024):
+    """MLA: latent-compressed KV.  Decode uses the absorbed-matmul form so
+    the cache stays (kv_lora + rope) wide — the technique's memory win."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+
+    cq = apply_norm(params["q_norm"], x @ params["w_dq"], "rms")
+    q = (cq @ params["w_uq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    dkv = x @ params["w_dkv"]                                 # (B,S,rank+dr)
+    c_kv = apply_norm(params["kv_norm"], dkv[..., :m.kv_lora_rank], "rms")
+    k_rope = dkv[..., m.kv_lora_rank:]                        # (B,S,dr)
+
+    if mode == "decode":
+        assert cache is not None
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                            cfg.rope_theta)[:, :, 0]
+        cc = _masked_cache_write(cache.c_kv, c_kv, cache_pos)
+        cr = _masked_cache_write(cache.k_rope, k_rope, cache_pos)
+        new_cache = MLACache(cc, cr)
+        s_max = cc.shape[1]
+        # absorbed: q_abs[b,1,h,r] = q_nope . W_uk(r, h, dn)
+        w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, dn)
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        scores = jnp.einsum("bshr,btr->bhst", q_abs,
+                            cc.astype(jnp.float32))
+        scores += jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                             cr.astype(jnp.float32))
+        scores *= (dn + dr) ** -0.5
+        valid = jnp.arange(s_max)[None, None, None] <= cache_pos
+        scores = jnp.where(valid, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", p, cc.astype(jnp.float32))
+        w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, dv)
+        y = jnp.einsum("bshr,rhd->bshd", ctx, w_uv.astype(jnp.float32))
+        y = y.reshape(b, s, h * dv).astype(x.dtype)
+        return y @ params["w_o"], new_cache
+
+    # train / prefill: expand to standard multi-head form
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope_r = apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta)                     # (B,S,1,dr)
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, dn)
+    v = (c_kv @ params["w_uv"]).reshape(b, s, h, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_r, (b, s, h, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    new_cache = MLACache(c_kv, k_rope_r[:, :, 0]) if mode == "prefill" else None
+    y = flash_attention(q_full, k, v, causal=True,
+                        q_block=q_block, kv_block=kv_block)
+    y = y.reshape(b, s, h * dv)
+    return y @ params["w_o"], new_cache
+
+
+# --------------------------------------------------------------------------
+# decode paths (Sq == 1): plain masked attention over the cache
+# --------------------------------------------------------------------------
+
+class WindowKVCache(NamedTuple):
+    """Ring-buffer KV cache for sliding-window attention (O(window) memory,
+    the reason hybrid archs can run long_500k).  pos_slots stores absolute
+    positions per slot (-1 = empty)."""
+    k: jax.Array            # (B, W, H_kv, Dh)
+    v: jax.Array
+    pos_slots: jax.Array    # (W,) int32
+
+
+def _plain_decode_attn(q, k, v, mask):
+    """q: (B,1,Hq,D); k/v: (B,S,Hkv,D); mask: (B,1,1,S) or (1,1,1,S).
+
+    Operands stay in the cache dtype with f32 ACCUMULATION
+    (preferred_element_type) — casting the cache to f32 makes XLA hoist a
+    float32 copy of the entire stacked cache out of the layer scan.
+    """
+    b, _, hq, dq = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, dq).astype(k.dtype)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
+                   preferred_element_type=jnp.float32) * dq ** -0.5
+    s = jnp.where(mask[:, :, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, -1).astype(q.dtype)
+
+
+def _masked_cache_write(cache_arr, new, cache_pos, seq_axis=1):
+    """Write ``new`` (length-1 seq) at ``cache_pos`` WITHOUT
+    dynamic-update-slice: a select against iota stays elementwise over a
+    sequence-SHARDED cache dim, while DUS with a traced index forces the
+    SPMD partitioner to re-materialize the whole cache per layer."""
+    s_max = cache_arr.shape[seq_axis]
+    iota_shape = [1] * cache_arr.ndim
+    iota_shape[seq_axis] = s_max
+    sel = (jax.lax.broadcasted_iota(jnp.int32, tuple(iota_shape), seq_axis)
+           == cache_pos)
+    return jnp.where(sel, new.astype(cache_arr.dtype), cache_arr)
+
+
+def gqa_decode(params, x, cfg, *, cache, cache_pos, positions):
+    """Single-token decode against a full-length cache."""
+    b, s, d = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ params["w_q"]
+    k = x @ params["w_k"]
+    v = x @ params["w_v"]
+    if "b_q" in params:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(b, 1, nq, hd)
+    k = k.reshape(b, 1, nkv, hd)
+    v = v.reshape(b, 1, nkv, hd)
+    if cfg.pos_kind == "rope":
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    ck = _masked_cache_write(cache.k, k, cache_pos)
+    cv = _masked_cache_write(cache.v, v, cache_pos)
+    s_max = ck.shape[1]
+    mask = (jnp.arange(s_max) <= cache_pos)[None, None, None]
+    y = _plain_decode_attn(q, ck, cv, mask)
+    y = y.reshape(b, 1, nq * hd)
+    return y @ params["w_o"], KVCache(ck, cv)
+
+
+def gqa_decode_window(params, x, cfg, *, cache: WindowKVCache, cache_pos,
+                      positions):
+    """Single-token decode against a ring-buffer window cache."""
+    b, s, d = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    w = cache.k.shape[1]
+    q = x @ params["w_q"]
+    k = x @ params["w_k"]
+    v = x @ params["w_v"]
+    if "b_q" in params:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(b, 1, nq, hd)
+    k = k.reshape(b, 1, nkv, hd)
+    v = v.reshape(b, 1, nkv, hd)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    slot = cache_pos % w
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, slot, 0, 0))
+    pos_slots = jax.lax.dynamic_update_slice(
+        cache.pos_slots, cache_pos[None].astype(jnp.int32), (slot,))
+    # valid: written, within window of the current position
+    valid = (pos_slots >= 0) & (pos_slots <= cache_pos) \
+        & (cache_pos - pos_slots < w)
+    mask = valid[None, None, None]
+    y = _plain_decode_attn(q, ck, cv, mask)
+    y = y.reshape(b, 1, nq * hd)
+    return y @ params["w_o"], WindowKVCache(ck, cv, pos_slots)
+
+
+def cross_decode(params, x, cfg, *, cache: KVCache):
+    """Cross-attention decode: static encoder KV, no masking."""
+    b = x.shape[0]
+    hd, nq = cfg.resolved_head_dim, cfg.n_heads
+    q = x @ params["w_q"]
+    if "b_q" in params:
+        q = q + params["b_q"]
+    q = q.reshape(b, 1, nq, hd)
+    s_enc = cache.k.shape[1]
+    mask = jnp.ones((1, 1, 1, s_enc), bool)
+    y = _plain_decode_attn(q, cache.k, cache.v, mask)
+    y = y.reshape(b, 1, nq * hd)
+    return y @ params["w_o"], cache

@@ -1,0 +1,103 @@
+"""Griffin / RecurrentGemma recurrent block: temporal conv + RG-LRU
+(arXiv:2402.19427), evaluated with an associative scan (TPU-parallel).
+
+RG-LRU:  a_t = exp(-c * softplus(Λ) * sigmoid(W_a x_t)),
+         h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0  # griffin's fixed recurrence sharpness constant
+_N_BLOCKS = 16  # block-diagonal gate matrices
+
+
+def griffin_init(key, cfg, dtype):
+    d = cfg.d_model
+    lw = cfg.recurrent.lru_width or d
+    cw = cfg.recurrent.conv_width
+    nb = _N_BLOCKS if lw % _N_BLOCKS == 0 else 1
+    bs = lw // nb
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c = exp(-c softplus Λ) spans ~[0.9, 0.999]
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, lw)) / _C)).astype(jnp.float32)
+    return {
+        "w_x": dense_init(ks[0], d, lw, dtype),
+        "w_gate": dense_init(ks[1], d, lw, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cw, lw), jnp.float32)
+                   * cw ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((lw,), dtype),
+        "w_a": (jax.random.normal(ks[3], (nb, bs, bs), jnp.float32)
+                * bs ** -0.5).astype(dtype),
+        "w_i": (jax.random.normal(ks[4], (nb, bs, bs), jnp.float32)
+                * bs ** -0.5).astype(dtype),
+        "lam": lam,
+        "w_out": dense_init(ks[5], lw, d, dtype, scale=lw ** -0.5),
+    }
+
+
+def _block_diag(x, w):
+    """x: (B,S,L) @ block-diagonal w: (nb, bs, bs) -> (B,S,L)."""
+    b, s, l = x.shape
+    nb = w.shape[0]
+    xr = x.reshape(b, s, nb, l // nb)
+    return jnp.einsum("bsnl,nlm->bsnm", xr, w).reshape(b, s, l)
+
+
+def rglru(x, a_gate, i_gate, lam, h0):
+    """x, gates: (B,S,L); lam: (L,); h0: (B,L) f32. Returns (h (B,S,L), h_S)."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(a_gate.astype(f32))
+    i = jax.nn.sigmoid(i_gate.astype(f32))
+    log_a = -_C * jax.nn.softplus(lam)[None, None] * r          # <= 0
+    a = jnp.exp(log_a)
+    gated = x.astype(f32) * i * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    if x.shape[1] == 1:  # decode
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = h + a_cum * h0[:, None]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def apply_griffin(params, x, cfg, *, state):
+    """Griffin recurrent block.  x: (B,S,D);
+    state: (h (B,L) f32, conv_buf (B, cw-1, L)).  Returns (y, state')."""
+    r = cfg.recurrent
+    cw = r.conv_width
+    h0, conv_buf = state
+
+    xb = x @ params["w_x"]                                     # (B,S,L)
+    gb = jax.nn.gelu(x @ params["w_gate"])
+
+    # causal depthwise temporal conv of width cw with carried buffer
+    padded = jnp.concatenate([conv_buf.astype(xb.dtype), xb], axis=1)
+    conv = sum(padded[:, j:j + xb.shape[1]] * params["conv_w"][j]
+               for j in range(cw)) + params["conv_b"]
+    new_buf = padded[:, -(cw - 1):].astype(jnp.float32) if cw > 1 else conv_buf
+
+    a_gate = _block_diag(conv, params["w_a"])
+    i_gate = _block_diag(conv, params["w_i"])
+    h, h_last = rglru(conv, a_gate, i_gate, params["lam"], h0)
+
+    y = (h * gb) @ params["w_out"]
+    return y, (h_last, new_buf)
+
+
+def griffin_init_state(cfg, batch: int):
+    r = cfg.recurrent
+    lw = r.lru_width or cfg.d_model
+    return (jnp.zeros((batch, lw), jnp.float32),
+            jnp.zeros((batch, r.conv_width - 1, lw), jnp.float32))

@@ -1,0 +1,158 @@
+"""Basic layers: norms, dense, embeddings, FFNs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Activation
+sharding is annotated with ``constrain`` which is a no-op outside a mesh
+context, so the same code runs in CPU smoke tests and the 512-device
+dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# mesh axis-name conventions used everywhere
+BATCH_AXES = ("pod", "data")   # "pod" present only in the multi-pod mesh
+MODEL_AXIS = "model"
+
+
+def _mesh_axis_names(auto_only: bool = False):
+    m = jax.sharding.get_abstract_mesh()
+    if m is None:
+        return ()
+    names = tuple(m.axis_names)
+    if auto_only:
+        auto = jax.sharding.AxisType.Auto
+        names = tuple(n for n, t in zip(names, m.axis_types) if t == auto)
+    return names
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint with graceful no-op off-mesh.
+
+    spec entries are axis names, tuples of axis names, or None; axis names
+    not present in the current mesh (or manual in the current shard_map
+    region) are dropped.
+    """
+    names = _mesh_axis_names(auto_only=True)
+    if not names:
+        return x
+
+    def fix(s):
+        if s is None:
+            return None
+        if isinstance(s, (tuple, list)):
+            kept = tuple(a for a in s if a in names)
+            return kept if kept else None
+        return s if s in names else None
+
+    return jax.lax.with_sharding_constraint(x, P(*(fix(s) for s in spec)))
+
+
+def batch_spec():
+    """The (possibly multi-pod) batch sharding axes present in the mesh."""
+    names = _mesh_axis_names()
+    kept = tuple(a for a in BATCH_AXES if a in names)
+    return kept if kept else None
+
+
+def model_size() -> int:
+    """Size of the model axis in the current (abstract) mesh, else 1."""
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or MODEL_AXIS not in m.axis_names:
+        return 1
+    return dict(m.shape)[MODEL_AXIS]
+
+
+def head_axis(n_heads: int):
+    """``model`` iff the head count divides the model axis evenly."""
+    ms = model_size()
+    return MODEL_AXIS if ms > 1 and n_heads % ms == 0 else None
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, dtype):
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# dense FFN (SwiGLU / GELU)
+# --------------------------------------------------------------------------
+
+def ffn_init(key, d: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"w_gate": dense_init(ks[0], d, d_ff, dtype),
+                "w_up": dense_init(ks[1], d, d_ff, dtype),
+                "w_down": dense_init(ks[2], d_ff, d, dtype, scale=d_ff ** -0.5)}
+    return {"w_up": dense_init(ks[0], d, d_ff, dtype),
+            "b_up": jnp.zeros((d_ff,), dtype),
+            "w_down": dense_init(ks[1], d_ff, d, dtype, scale=d_ff ** -0.5),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def apply_ffn(params, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        h = constrain(h, batch_spec(), None, MODEL_AXIS)
+        return h @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"] + params["b_up"])
+    h = constrain(h, batch_spec(), None, MODEL_AXIS)
+    return h @ params["w_down"] + params["b_down"]
+
+
+# --------------------------------------------------------------------------
+# RWKV channel mix (the rwkv_channel_mix "ffn")
+# --------------------------------------------------------------------------
+
+def rwkv_cmix_init(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {"w_k": dense_init(ks[0], d, d_ff, dtype),
+            "w_v": dense_init(ks[1], d_ff, d, dtype, scale=d_ff ** -0.5),
+            "w_r": dense_init(ks[2], d, d, dtype),
+            "mix_k": jnp.full((d,), 0.5, dtype),
+            "mix_r": jnp.full((d,), 0.5, dtype)}
+
+
+def apply_rwkv_cmix(params, x, x_prev):
+    """RWKV channel mix with token shift.  x: (B,S,D); x_prev: (B,1,D) f32
+    carry (returned as f32 so decode cache dtypes are stable)."""
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    xk = x * params["mix_k"] + shifted * (1 - params["mix_k"])
+    xr = x * params["mix_r"] + shifted * (1 - params["mix_r"])
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    k = constrain(k, batch_spec(), None, MODEL_AXIS)
+    v = k @ params["w_v"]
+    r = jax.nn.sigmoid(xr @ params["w_r"])
+    return r * v, x[:, -1:].astype(jnp.float32)

@@ -1,0 +1,235 @@
+"""Unified model API over every assigned architecture.
+
+One parameter pytree + four entry points, uniform across dense / MoE /
+MLA / enc-dec / VLM / SSM / hybrid families:
+
+  * ``init_params(key, cfg, max_seq)``     — full parameter pytree
+  * ``loss_fn(params, cfg, batch, ...)``   — next-token CE (vocab-sharded)
+  * ``prefill(params, cfg, batch, s_max)`` — build decode caches + last logits
+  * ``decode_step(params, cfg, state, tok)`` — one-token step (the dry-run's
+    ``serve_step`` lowers this)
+
+Modality frontends are STUBS per the assignment: whisper consumes
+precomputed frame embeddings ``(B, enc_seq, d_model)``; qwen2-vl consumes
+precomputed patch embeddings scattered over the first ``n_vis`` sequence
+slots plus (3, B, S) M-RoPE position streams.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.rope import sinusoidal_embedding
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+def _dt(cfg: ModelConfig):
+    return DTYPES[cfg.param_dtype]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, *, max_seq: int = 4096) -> dict:
+    dtype = _dt(cfg)
+    v = cfg.padded_vocab()
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    params: dict = {
+        "embed": L.embed_init(ks[0], v, d, dtype),
+        "norm_f": L.norm_init(d, cfg.norm, dtype),
+        "dec": T.stack_init(ks[1], cfg, dtype, n_layers=cfg.n_layers,
+                            pattern=cfg.mixer_pattern,
+                            with_cross=cfg.is_encoder_decoder),
+    }
+    if not cfg.tie_embeddings:
+        params["w_lm"] = L.dense_init(ks[2], d, v, dtype)
+    if cfg.pos_kind == "learned":
+        params["pos_embed"] = (jax.random.normal(
+            ks[3], (max_seq, d), jnp.float32) * 0.01).astype(dtype)
+    if cfg.is_encoder_decoder:
+        params["enc"] = {
+            "stack": T.stack_init(ks[4], cfg, dtype,
+                                  n_layers=cfg.n_encoder_layers,
+                                  pattern=("attn",), with_cross=False),
+            "norm_f": L.norm_init(d, cfg.norm, dtype),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# embeddings / positions / logits
+# --------------------------------------------------------------------------
+
+def make_positions(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    """(B, S) int32 positions, or (3, B, S) M-RoPE streams (text: all equal)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
+                 pos_offset=0):
+    """tokens: (B, S) int32 -> (B, S, D).  VLM stub: ``vision_embeds``
+    (B, n_vis, D) overwrite the first n_vis slots (dynamic_update_slice)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if vision_embeds is not None:
+        n_vis = vision_embeds.shape[1]
+        if n_vis >= x.shape[1]:
+            x = vision_embeds[:, :x.shape[1]].astype(x.dtype)
+        else:
+            x = jax.lax.dynamic_update_slice(
+                x, vision_embeds.astype(x.dtype), (0, 0, 0))
+    if cfg.pos_kind == "learned":
+        s = x.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"],
+                                          pos_offset, s, axis=0)
+        x = x + pe.astype(x.dtype)
+    x = L.constrain(x, L.batch_spec(), None, None)
+    return x
+
+
+def logits_fn(params, cfg: ModelConfig, x):
+    """Final norm + LM head.  Logits constrained vocab-sharded over model."""
+    h = L.apply_norm(params["norm_f"], x, cfg.norm)
+    w = params["embed"].T if cfg.tie_embeddings else params["w_lm"]
+    logits = h @ w.astype(h.dtype)
+    return L.constrain(logits, L.batch_spec(), None, L.MODEL_AXIS)
+
+
+# --------------------------------------------------------------------------
+# encoder (whisper stub frontend: precomputed frame embeddings)
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames, *, q_block=1024, kv_block=1024):
+    """frames: (B, enc_seq, D) precomputed embeddings -> (B, enc_seq, D)."""
+    b, s, d = frames.shape
+    x = frames.astype(_dt(cfg))
+    x = x + sinusoidal_embedding(s, d, x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _, _ = T.stack_apply(params["enc"]["stack"], cfg, x, pattern=("attn",),
+                            mode="encode", positions=pos,
+                            q_block=q_block, kv_block=kv_block)
+    return L.apply_norm(params["enc"]["norm_f"], x, cfg.norm)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
+            remat: str = "none", q_block: int = 1024, kv_block: int = 1024):
+    """batch keys: tokens (B,S); optional frames (enc-dec), vision_embeds
+    (vlm), positions (override).  Returns (logits, caches_or_None, aux)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, b, s)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, batch["frames"],
+                         q_block=q_block, kv_block=kv_block)
+    x = embed_tokens(params, cfg, tokens,
+                     vision_embeds=batch.get("vision_embeds"))
+    x, caches, aux = T.stack_apply(
+        params["dec"], cfg, x, pattern=cfg.mixer_pattern, mode=mode,
+        positions=positions, enc_out=enc_out, remat=remat,
+        q_block=q_block, kv_block=kv_block)
+    logits = logits_fn(params, cfg, x)
+    return logits, caches, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, remat: str = "none",
+            q_block: int = 1024, kv_block: int = 1024):
+    """Next-token cross-entropy.  labels: (B,S) int32, -1 = ignore.
+
+    The CE is computed against vocab-sharded logits: log-sum-exp and the
+    label pick both reduce over the sharded vocab axis (XLA inserts the
+    small (B,S) all-reduces — never an all-gather of the logits; this is
+    the FD principle applied to the loss).
+    """
+    logits, _, aux = forward(params, cfg, batch, mode="train", remat=remat,
+                             q_block=q_block, kv_block=kv_block)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)                          # (B,S)
+    v = lf.shape[-1]
+    onehot = (labels[..., None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, 1, v), 2))
+    picked = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)        # (B,S)
+    mask = (labels >= 0).astype(jnp.float32)
+    n_tok = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum((lse - picked) * mask) / n_tok
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "n_tok": n_tok}
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: Any           # transformer.stack_caches pytree
+    pos: jax.Array        # scalar int32 — next write position
+
+
+def init_decode_state(cfg: ModelConfig, *, batch: int, s_max: int,
+                      cache_dtype=jnp.bfloat16) -> DecodeState:
+    caches = T.stack_caches(cfg, n_layers=cfg.n_layers,
+                            pattern=cfg.mixer_pattern, batch=batch,
+                            s_max=s_max, dtype=cache_dtype,
+                            with_cross=cfg.is_encoder_decoder,
+                            enc_seq=cfg.encoder_seq)
+    return DecodeState(caches, jnp.zeros((), jnp.int32))
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, *,
+            q_block: int = 1024, kv_block: int = 1024):
+    """Run the prompt through the stack, building caches.
+
+    Returns (logits_last (B,V), DecodeState).  Note: prefill caches cover
+    exactly the prompt; decode-time growth uses pre-sized caches from
+    ``init_decode_state`` + ``dynamic_update_slice`` writes instead, so
+    serving drivers prefill into a pre-sized state via ``prefill_into``.
+    """
+    tokens = batch["tokens"]
+    logits, caches, _ = forward(params, cfg, batch, mode="prefill",
+                                q_block=q_block, kv_block=kv_block)
+    state = DecodeState(caches, jnp.asarray(tokens.shape[1], jnp.int32))
+    return logits[:, -1], state
+
+
+def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens,
+                *, enc_out=None):
+    """One decode step.  tokens: (B, 1) int32.  Returns (logits (B,1,V),
+    new state).  Works for every family: attention caches are written at
+    ``state.pos``; SSM/hybrid states advance in O(1)."""
+    b = tokens.shape[0]
+    positions = make_positions(cfg, b, 1, offset=state.pos)
+    x = embed_tokens(params, cfg, tokens, pos_offset=state.pos)
+    x, caches, _ = T.stack_apply(
+        params["dec"], cfg, x, pattern=cfg.mixer_pattern, mode="decode",
+        positions=positions, caches=state.caches, cache_pos=state.pos,
+        enc_out=enc_out)
+    logits = logits_fn(params, cfg, x)
+    return logits, DecodeState(caches, state.pos + 1)
+
+
+# --------------------------------------------------------------------------
+# parameter counting helper (cross-checks cfg.param_count against the tree)
+# --------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

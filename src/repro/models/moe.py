@@ -1,0 +1,250 @@
+"""Top-k routed Mixture-of-Experts FFN.
+
+Router top-k is the paper's "local query execution" (a per-token local
+top-k over expert scores — no communication), and the dispatch keeps only
+the routed (promising) experts, the paper's statistics-heuristic analogue.
+
+Implementation: sort-based token grouping + ``jax.lax.ragged_dot`` grouped
+GEMMs — exact (dropless), static shapes, differentiable.  Expert weights
+are tensor-sharded on the per-expert hidden dim (d_expert over the model
+axis), so dispatch needs no all-to-all; the combine is the same psum the
+dense FFN TP already pays.  (EP + all-to-all is a §Perf variant.)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (MODEL_AXIS, batch_spec, constrain,
+                                 dense_init)
+from repro.models.layers import model_size as _model_size
+
+
+def moe_init(key, cfg, dtype):
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e.n_experts, jnp.float32, scale=0.02),
+        "w_gate": (jax.random.normal(ks[1], (e.n_experts, d, f), jnp.float32)
+                   * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e.n_experts, d, f), jnp.float32)
+                 * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e.n_experts, f, d), jnp.float32)
+                   * f ** -0.5).astype(dtype),
+    }
+    if e.n_shared_experts:
+        fs = f * e.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kss[0], d, fs, dtype),
+            "w_up": dense_init(kss[1], d, fs, dtype),
+            "w_down": dense_init(kss[2], fs, d, dtype, scale=fs ** -0.5),
+        }
+    return p
+
+
+def apply_moe(params, x, cfg):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    aux_loss is the Switch/GShard load-balance loss (mean fraction *
+    mean gate mass per expert * n_experts).
+
+    Distribution: routing is token-independent, so the sort-based
+    dispatch runs *per data shard* inside a partial-manual shard_map —
+    the global argsort would otherwise force an all-gather of every
+    token (the CN anti-pattern).  The model axis stays automatic: expert
+    weights keep their F-dim tensor sharding inside the region.
+    """
+    from repro.models.layers import _mesh_axis_names, BATCH_AXES
+    names = _mesh_axis_names()
+    manual = tuple(a for a in BATCH_AXES if a in names)
+    if manual:
+        import math as _math
+        mesh = jax.sharding.get_abstract_mesh()
+        bsize = _math.prod(dict(mesh.shape)[a] for a in manual)
+        if x.shape[0] % bsize != 0:
+            manual = ()
+    if not manual:
+        return _moe_local(params, x, cfg)
+    return _moe_dispatch_outside(params, x, cfg, manual)
+
+
+def _moe_dispatch_outside(params, x, cfg, manual):
+    """Distributed MoE with the expert GEMMs OUTSIDE the manual region.
+
+    Only the (weight-free) dispatch and combine run per data shard inside
+    shard_map; the batched expert GEMMs are ordinary pjit einsums whose
+    gradients flow through standard SPMD paths — ONE reduce-scatter of
+    the expert-weight grads per microbatch into the data-sharded
+    accumulator (ZeRO-1), instead of a full f32 all-reduce per layer per
+    microbatch (the v1 design measured 1 TB/device/step on
+    moonshot × train_4k; see EXPERIMENTS.md §Perf).
+    """
+    import math as _math
+    from jax.sharding import PartitionSpec as P
+    e = cfg.moe
+    b, s, d = x.shape
+    mesh = jax.sharding.get_abstract_mesh()
+    bsize = _math.prod(dict(mesh.shape)[a] for a in manual)
+    t_local = (b // bsize) * s
+    k = e.top_k
+    cap = int(_math.ceil(t_local * k / e.n_experts * e.capacity_factor))
+
+    def dispatch(router, xl):
+        bl, sl, _ = xl.shape
+        tl = bl * sl
+        xf = xl.reshape(tl, d)
+        logits = xf.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+        frac = jnp.mean(jax.nn.one_hot(expert_ids, e.n_experts,
+                                       dtype=jnp.float32), axis=(0, 1))
+        mass = jnp.mean(probs, axis=0)
+        aux = e.n_experts * jnp.sum(frac * mass) * e.router_aux_coef
+        flat_exp = expert_ids.reshape(-1)
+        order = jnp.argsort(flat_exp)
+        inv_order = jnp.argsort(order)
+        tok_idx = order // k
+        sorted_exp = jnp.take(flat_exp, order)
+        counts = jnp.bincount(flat_exp, length=e.n_experts)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(tl * k) - jnp.take(starts, sorted_exp)
+        slot = jnp.where(rank < cap, sorted_exp * cap + rank,
+                         e.n_experts * cap)
+        buf = jnp.zeros((e.n_experts * cap, d), xl.dtype)
+        buf = buf.at[slot].set(jnp.take(xf, tok_idx, axis=0), mode="drop")
+        slot_of_flat = jnp.take(slot, inv_order)
+        return (buf.reshape(e.n_experts, cap, d), gate_vals,
+                slot_of_flat, jax.lax.pmean(aux, manual))
+
+    buf, gates, slot_of_flat, aux = jax.shard_map(
+        dispatch, mesh=mesh,
+        in_specs=(P(), P(manual, None, None)),
+        out_specs=(P(None, manual, None), P(manual, None), P(manual), P()),
+        axis_names=set(manual), check_vma=False)(params["router"], x)
+
+    # ---- batched expert GEMMs under plain pjit, EXPERT-PARALLEL ---------
+    # buf arrives model-replicated from the dispatch region; constraining
+    # it E-over-model is a local slice (free).  The GEMMs are then fully
+    # local per model rank (both operands E-sharded).  ye is re-replicated
+    # over model for the combine gather — ONE all-gather of the rank's
+    # (E/TP · C, D) slice, ~32x less operand traffic than the TP-on-F
+    # combine all-reduce this replaced (§Perf cell B, iteration B4).
+    # [Iteration B3's explicit AG/psum_scatter shard_map was refuted:
+    #  partial-manual in_specs reshard unmentioned auto dims.]
+    ep = e.n_experts % _model_size() == 0 and _model_size() > 1
+    if ep:
+        buf = constrain(buf, MODEL_AXIS, batch_spec(), None)
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = jax.nn.silu(h) * u
+    if ep:
+        h = constrain(h, MODEL_AXIS, batch_spec(), None)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    ye = constrain(ye, None, batch_spec(), None)
+
+    def combine(y_local, gates_l, slot_l):
+        tl = gates_l.shape[0]
+        y_flat = y_local.reshape(e.n_experts * cap, d)
+        kept = (slot_l < e.n_experts * cap)[:, None]
+        y_tok = jnp.take(y_flat, jnp.minimum(slot_l,
+                                             e.n_experts * cap - 1), axis=0)
+        y_tok = jnp.where(kept, y_tok, 0).reshape(tl, k, d)
+        y = jnp.sum(y_tok * gates_l[..., None].astype(y_tok.dtype), axis=1)
+        return y.reshape(tl // s, s, d)
+
+    y = jax.shard_map(
+        combine, mesh=mesh,
+        in_specs=(P(None, manual, None), P(manual, None), P(manual)),
+        out_specs=P(manual, None, None),
+        axis_names=set(manual), check_vma=False)(ye, gates, slot_of_flat)
+
+    if e.n_shared_experts:
+        sp = params["shared"]
+        xf = x.reshape(b * s, d)
+        hs = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        y = y + (hs @ sp["w_down"]).reshape(b, s, d)
+
+    return y.astype(x.dtype), aux
+
+
+def _moe_local(params, x, cfg, *, impl: str = "capacity"):
+    """Single-shard MoE.  impl:
+
+    * "capacity" (default) — sort-based dispatch into a static (E*C, D)
+      buffer + batched per-expert einsum GEMMs.  Static shapes, partitions
+      cleanly (the einsum's F dim carries the model-axis sharding), and —
+      unlike lax.ragged_dot — does NOT lower to a dense (E, T*k, D)
+      blow-up on backends without native grouped GEMM.  Tokens beyond
+      capacity C = ceil(T*k/E * capacity_factor) are dropped (GShard
+      semantics).
+    * "ragged" — exact dropless lax.ragged_dot grouped GEMM (TPU path).
+    """
+    e = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = e.top_k
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance aux loss
+    frac = jnp.mean(jax.nn.one_hot(expert_ids, e.n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    mass = jnp.mean(probs, axis=0)
+    aux = e.n_experts * jnp.sum(frac * mass) * e.router_aux_coef
+
+    # --- dispatch: sort (token, slot) pairs by expert id -----------------
+    flat_exp = expert_ids.reshape(-1)                          # (T*k,)
+    order = jnp.argsort(flat_exp)                              # static shape
+    inv_order = jnp.argsort(order)
+    tok_idx = order // k                                       # flat j -> token
+
+    if impl == "ragged":
+        xin = jnp.take(xf, tok_idx, axis=0)                    # (T*k, D)
+        group_sizes = jnp.bincount(flat_exp, length=e.n_experts)
+        h = jax.lax.ragged_dot(xin, params["w_gate"], group_sizes)
+        u = jax.lax.ragged_dot(xin, params["w_up"], group_sizes)
+        h = jax.nn.silu(h) * u
+        h = constrain(h, batch_spec(), MODEL_AXIS)
+        yo = jax.lax.ragged_dot(h, params["w_down"], group_sizes)
+        yo = jnp.take(yo, inv_order, axis=0).reshape(t, k, d)
+        y = jnp.sum(yo * gate_vals[..., None].astype(yo.dtype), axis=1)
+    else:
+        cap = int(math.ceil(t * k / e.n_experts * e.capacity_factor))
+        sorted_exp = jnp.take(flat_exp, order)                 # (T*k,)
+        counts = jnp.bincount(flat_exp, length=e.n_experts)    # (E,)
+        starts = jnp.cumsum(counts) - counts                   # (E,)
+        rank = jnp.arange(t * k) - jnp.take(starts, sorted_exp)
+        slot = jnp.where(rank < cap, sorted_exp * cap + rank,
+                         e.n_experts * cap)                    # OOB -> drop
+        buf = jnp.zeros((e.n_experts * cap, d), xf.dtype)
+        buf = buf.at[slot].set(jnp.take(xf, tok_idx, axis=0), mode="drop")
+        bufe = buf.reshape(e.n_experts, cap, d)
+        h = jnp.einsum("ecd,edf->ecf", bufe, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", bufe, params["w_up"])
+        h = jax.nn.silu(h) * u
+        h = constrain(h, None, None, MODEL_AXIS)
+        ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+        y_buf = ye.reshape(e.n_experts * cap, d)
+        slot_of_flat = jnp.take(slot, inv_order)               # (T*k,)
+        kept = (slot_of_flat < e.n_experts * cap)[:, None]
+        y_flat = jnp.take(y_buf, jnp.minimum(
+            slot_of_flat, e.n_experts * cap - 1), axis=0)
+        y_flat = jnp.where(kept, y_flat, 0)
+        yo = y_flat.reshape(t, k, d)
+        y = jnp.sum(yo * gate_vals[..., None].astype(yo.dtype), axis=1)
+
+    if e.n_shared_experts:
+        sp = params["shared"]
+        hs = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+
+    return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,54 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, Dh); positions3: (3, B, S) (t, h, w) position streams;
+    sections: per-stream frequency-section sizes summing to Dh // 2.
+    For text tokens all three streams are equal and M-RoPE == RoPE.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                        # (half,)
+    # pick which position stream drives each frequency section
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)                 # (half,)
+    pos = positions3.astype(jnp.float32)                          # (3,B,S)
+    ang = jnp.take(pos, sec_id, axis=0)                           # (half,B,S)
+    ang = jnp.moveaxis(ang, 0, -1) * freqs                        # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_embedding(seq_len: int, d: int, dtype):
+    """Whisper-style sinusoidal position table (computed, not learned)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = pos * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" time mixing: linear attention with data-dependent
+per-channel decay (arXiv:2404.05892).
+
+Two equivalent evaluators:
+  * ``rwkv6_scan``     — naive per-token recurrence (oracle + decode step)
+  * ``rwkv6_chunked``  — chunkwise-parallel form used for train/prefill.
+
+The chunked form is numerically EXACT (not a descale approximation): all
+intra-chunk decay factors are exp of *non-positive* sums computed by
+cumsum differences, and cross-chunk information flows through the f32
+state, so no unbounded exp ever appears.  Chunk size trades VMEM
+((B,C,C,H,K) transient) against sequential depth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# --------------------------------------------------------------------------
+# core recurrence
+# --------------------------------------------------------------------------
+
+def rwkv6_scan(r, k, v, w, u, s0):
+    """Naive recurrence.  r,k,v,w: (B,T,H,K); u: (H,K); s0: (B,H,K,V).
+
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (o (B,T,H,V), s_T).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                                  # (B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]                # (B,H,K,V)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    s_t, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(o, 0, 1), s_t
+
+
+def rwkv6_chunked(r, k, v, w, u, s0, chunk: int = 16):
+    """Chunkwise-parallel evaluation, exact (see module docstring)."""
+    b, t, h, kk = r.shape
+    vv = v.shape[-1]
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    n = (t + pad) // c
+
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(b, n, c, h, kk)
+    kc = k.astype(f32).reshape(b, n, c, h, kk)
+    vc = v.astype(f32).reshape(b, n, c, h, vv)
+    lw = jnp.log(jnp.clip(w.astype(f32), 1e-12, 1.0)).reshape(b, n, c, h, kk)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(s, inp):
+        # checkpointed: the (B,C,C,H,K) intra-chunk decay tensor is
+        # recomputed in the backward pass instead of being saved per
+        # chunk — O(T·C·H·K) residual memory would otherwise dominate
+        # the whole training step (72 GiB/dev at C=128 on rwkv6-3b).
+        r_c, k_c, v_c, lw_c = inp             # (B,C,H,K) / (B,C,H,V)
+        cum = jnp.cumsum(lw_c, axis=1)        # inclusive  (B,C,H,K)
+        cumx = cum - lw_c                     # exclusive-before-i
+
+        # inter-chunk: o_i += (r_i * exp(cumx_i)) . S
+        rs = r_c * jnp.exp(cumx)
+        o = jnp.einsum("bchk,bhkv->bchv", rs, s)
+
+        # intra-chunk (j < i): exp(cumx_i - cum_j) FACTORIZES as
+        # exp(cumx_i - m) * exp(m - cum_j), so the (B,C,C,H,K) decay
+        # tensor never materializes — two exps + one batched GEMM.
+        # m is a per-(b,h,k) chunk center keeping both exponents within
+        # half the chunk's decay range (f32-safe: |exp| <= e^(range/2)).
+        mid = 0.5 * (cum[:, :1] + cum[:, -1:])           # (B,1,H,K)
+        qd = r_c * jnp.exp(cumx - mid)                   # (B,C,H,K)
+        kd2 = k_c * jnp.exp(mid - cum)                   # (B,C,H,K)
+        a = jnp.einsum("bihk,bjhk->bhij", qd, kd2)       # (B,H,C,C)
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+        a = a * mask[None, None]
+        o = o + jnp.einsum("bhij,bjhv->bihv", a, v_c)
+
+        # current-token bonus: o_i += (r_i * u) . (k_i v_i^T)
+        au = jnp.einsum("bihk,bihk->bih", r_c * u[None, None], k_c)
+        o = o + au[..., None] * v_c
+
+        # state: S' = diag(exp(cum_C)) S + sum_j (k_j exp(cum_C - cum_j)) v_j^T
+        tot = cum[:, -1]                                  # (B,H,K)
+        kd = k_c * jnp.exp(tot[:, None] - cum)
+        s = jnp.exp(tot)[..., None] * s + jnp.einsum("bjhk,bjhv->bhkv", kd, v_c)
+        return s, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, lw))
+    s_t, o = jax.lax.scan(chunk_step, s0.astype(f32), xs)
+    o = jnp.moveaxis(o, 0, 1).reshape(b, n * c, h, vv)[:, :t]
+    return o, s_t
+
+
+# --------------------------------------------------------------------------
+# the full time-mix layer
+# --------------------------------------------------------------------------
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    kdim = cfg.recurrent.rwkv_head_dim
+    h = d // kdim
+    ks = jax.random.split(key, 8)
+    # decay init: slow->fast across channels (rwkv convention)
+    ratio = jnp.arange(d, dtype=jnp.float32) / max(d - 1, 1)
+    decay_base = -6.0 + 5.0 * ratio ** 0.7
+    u = 0.5 * (1.0 - ratio)
+    return {
+        "mu": jnp.full((5, d), 0.5, dtype),        # r,k,v,w,g token-shift mixes
+        "w_r": dense_init(ks[0], d, d, dtype),
+        "w_k": dense_init(ks[1], d, d, dtype),
+        "w_v": dense_init(ks[2], d, d, dtype),
+        "w_g": dense_init(ks[3], d, d, dtype),
+        "w_o": dense_init(ks[4], d, d, dtype),
+        "decay_base": decay_base.astype(jnp.float32),
+        "lora_wa": dense_init(ks[5], d, 32, dtype, scale=0.01),
+        "lora_wb": dense_init(ks[6], 32, d, dtype, scale=0.01),
+        "u": u.astype(jnp.float32),
+        "ln_x": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+    }
+
+
+def apply_rwkv(params, x, cfg, *, state, x_prev, chunk: int | None = None):
+    """RWKV-6 time mix.  x: (B,S,D); state: (B,H,K,V) f32; x_prev: (B,1,D).
+
+    Returns (y, (state', x_last)).  Decode is just S == 1 (scan path).
+    """
+    b, s, d = x.shape
+    kdim = cfg.recurrent.rwkv_head_dim
+    h = d // kdim
+    chunk = chunk or cfg.recurrent.chunk_size
+
+    shifted = jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+    mu = params["mu"].astype(x.dtype)
+
+    def mix(i):
+        return x * mu[i] + shifted * (1 - mu[i])
+
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = (xr @ params["w_r"]).reshape(b, s, h, kdim)
+    k = (xk @ params["w_k"]).reshape(b, s, h, kdim)
+    v = (xv @ params["w_v"]).reshape(b, s, h, kdim)
+    g = jax.nn.silu(xg @ params["w_g"])
+
+    # data-dependent decay (Finch): w = exp(-exp(base + lora(xw)))
+    adj = jnp.tanh(xw @ params["lora_wa"]) @ params["lora_wb"]
+    logit = params["decay_base"][None, None] + adj.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logit)).reshape(b, s, h, kdim)
+
+    u = params["u"].reshape(h, kdim)
+    if s == 1:
+        o, state = rwkv6_scan(r, k, v, w, u, state)
+    else:
+        o, state = rwkv6_chunked(r, k, v, w, u, state, chunk)
+
+    # per-head group norm
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 1e-5)
+    o = o.reshape(b, s, d).astype(x.dtype)
+    o = o * params["ln_x"]["scale"] + params["ln_x"]["bias"]
+
+    y = (o * g) @ params["w_o"]
+    return y, (state, x[:, -1:].astype(jnp.float32))
+
+
+def rwkv_init_state(cfg, batch: int):
+    kdim = cfg.recurrent.rwkv_head_dim
+    h = cfg.d_model // kdim
+    return (jnp.zeros((batch, h, kdim, kdim), jnp.float32),
+            jnp.zeros((batch, 1, cfg.d_model), jnp.float32))

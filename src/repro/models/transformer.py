@@ -1,0 +1,295 @@
+"""Transformer stacks: blocks, scan-over-layers, pattern groups, remat.
+
+Layers are grouped by ``cfg.mixer_pattern``: a scan runs over whole groups
+(homogeneous pytrees), a remainder (n_layers % len(pattern)) is unrolled.
+Caches follow the same (groups-stacked, remainder-list) structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import griffin, moe as moe_mod, rwkv
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------------
+# single block
+# --------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, kind: str, dtype, with_cross: bool):
+    d = cfg.d_model
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p: dict = {"norm1": L.norm_init(d, cfg.norm, dtype),
+               "norm2": L.norm_init(d, cfg.norm, dtype)}
+    if kind == "attn":
+        p["mixer"] = (attn.mla_init(k1, cfg, dtype)
+                      if cfg.attn_kind == "mla" else attn.gqa_init(k1, cfg, dtype))
+    elif kind == "rwkv":
+        p["mixer"] = rwkv.rwkv_init(k1, cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = griffin.griffin_init(k1, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if with_cross:
+        p["norm_c"] = L.norm_init(d, cfg.norm, dtype)
+        p["cross"] = attn.gqa_init(k2, cfg, dtype)
+    if cfg.moe is not None:
+        p["ffn"] = moe_mod.moe_init(k3, cfg, dtype)
+    elif cfg.act == "rwkv_channel_mix":
+        p["ffn"] = L.rwkv_cmix_init(k3, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["ffn"] = L.ffn_init(k3, d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, s_max: int,
+                     dtype, with_cross: bool, enc_seq: int = 0):
+    """Zero/empty caches for decode."""
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    c: dict = {}
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            m = cfg.mla
+            c["self"] = attn.MLACache(
+                jnp.zeros((batch, s_max, m.kv_lora_rank), dtype),
+                jnp.zeros((batch, s_max, m.qk_rope_dim), dtype))
+        elif cfg.local_window:
+            w = min(cfg.local_window, s_max)
+            c["self"] = attn.WindowKVCache(
+                jnp.zeros((batch, w, nkv, hd), dtype),
+                jnp.zeros((batch, w, nkv, hd), dtype),
+                jnp.full((w,), -1, jnp.int32))
+        else:
+            c["self"] = attn.KVCache(
+                jnp.zeros((batch, s_max, nkv, hd), dtype),
+                jnp.zeros((batch, s_max, nkv, hd), dtype))
+    elif kind == "rwkv":
+        kd = cfg.recurrent.rwkv_head_dim
+        h = cfg.d_model // kd
+        c["state"] = jnp.zeros((batch, h, kd, kd), jnp.float32)
+        c["xp_t"] = jnp.zeros((batch, 1, cfg.d_model), jnp.float32)
+        c["xp_c"] = jnp.zeros((batch, 1, cfg.d_model), jnp.float32)
+    elif kind == "rglru":
+        lw = cfg.recurrent.lru_width or cfg.d_model
+        c["h"] = jnp.zeros((batch, lw), jnp.float32)
+        c["conv"] = jnp.zeros((batch, cfg.recurrent.conv_width - 1, lw),
+                              jnp.float32)
+    if with_cross:
+        c["cross"] = attn.KVCache(
+            jnp.zeros((batch, enc_seq, nkv, hd), dtype),
+            jnp.zeros((batch, enc_seq, nkv, hd), dtype))
+    return c
+
+
+def block_apply(params, cfg: ModelConfig, kind: str, x, *, positions, mode,
+                cache: Optional[dict] = None, cache_pos=None, enc_out=None,
+                q_block: int = 1024, kv_block: int = 1024):
+    """Apply one block.  Returns (x', cache', aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {} if cache is not None or mode == "prefill" else None
+    h = L.apply_norm(params["norm1"], x, cfg.norm)
+
+    if kind == "attn":
+        window = cfg.local_window
+        if mode == "decode":
+            if cfg.attn_kind == "mla":
+                y, c = attn.mla_attention(params["mixer"], h, cfg,
+                                          positions=positions, mode="decode",
+                                          cache=cache["self"],
+                                          cache_pos=cache_pos)
+            elif window:
+                y, c = attn.gqa_decode_window(params["mixer"], h, cfg,
+                                              cache=cache["self"],
+                                              cache_pos=cache_pos,
+                                              positions=positions)
+            else:
+                y, c = attn.gqa_decode(params["mixer"], h, cfg,
+                                       cache=cache["self"],
+                                       cache_pos=cache_pos,
+                                       positions=positions)
+        else:
+            if cfg.attn_kind == "mla":
+                y, c = attn.mla_attention(params["mixer"], h, cfg,
+                                          positions=positions, mode=mode,
+                                          q_block=q_block, kv_block=kv_block)
+            else:
+                y, c = attn.gqa_attention(params["mixer"], h, cfg,
+                                          positions=positions, mode=mode,
+                                          window=window, q_block=q_block,
+                                          kv_block=kv_block)
+        if new_cache is not None and c is not None:
+            new_cache["self"] = c
+    elif kind == "rwkv":
+        if cache is not None:
+            st, xp = cache["state"], cache["xp_t"]
+        else:
+            st, xp = rwkv.rwkv_init_state(cfg, x.shape[0])
+        y, (st2, xp2) = rwkv.apply_rwkv(params["mixer"], h, cfg,
+                                        state=st, x_prev=xp)
+        if new_cache is not None:
+            new_cache["state"], new_cache["xp_t"] = st2, xp2
+    elif kind == "rglru":
+        if cache is not None:
+            st = (cache["h"], cache["conv"])
+        else:
+            st = griffin.griffin_init_state(cfg, x.shape[0])
+        y, st2 = griffin.apply_griffin(params["mixer"], h, cfg, state=st)
+        if new_cache is not None:
+            new_cache["h"], new_cache["conv"] = st2
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if "cross" in params:
+        hc = L.apply_norm(params["norm_c"], x, cfg.norm)
+        if mode == "decode":
+            yc, cc = attn.cross_decode(params["cross"], hc, cfg,
+                                       cache=cache["cross"])
+        else:
+            yc, cc = attn.gqa_attention(params["cross"], hc, cfg,
+                                        positions=positions, mode=mode,
+                                        kv_source=enc_out, q_block=q_block,
+                                        kv_block=kv_block)
+        if new_cache is not None and cc is not None:
+            new_cache["cross"] = cc
+        x = x + yc
+
+    h = L.apply_norm(params["norm2"], x, cfg.norm)
+    if cfg.moe is not None:
+        y, aux = moe_mod.apply_moe(params["ffn"], h, cfg)
+    elif cfg.act == "rwkv_channel_mix":
+        xp = cache["xp_c"] if cache is not None else \
+            jnp.zeros((x.shape[0], 1, cfg.d_model), jnp.float32)
+        y, xp2 = L.apply_rwkv_cmix(params["ffn"], h, xp)
+        if new_cache is not None:
+            new_cache["xp_c"] = xp2
+    else:
+        y = L.apply_ffn(params["ffn"], h, cfg.act)
+    x = x + y
+    x = L.constrain(x, L.batch_spec(), None, None)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# stack (scan over pattern groups + unrolled remainder)
+# --------------------------------------------------------------------------
+
+def stack_layout(cfg: ModelConfig, n_layers: int, pattern: tuple):
+    glen = len(pattern)
+    return n_layers // glen, n_layers % glen
+
+
+def stack_init(key, cfg: ModelConfig, dtype, *, n_layers: int,
+               pattern: tuple, with_cross: bool):
+    n_groups, rem = stack_layout(cfg, n_layers, pattern)
+    keys = jax.random.split(key, n_groups * len(pattern) + rem)
+    params: dict = {"groups": [], "rem": []}
+    i = 0
+    for slot, kind in enumerate(pattern):
+        slot_keys = keys[i:i + n_groups]
+        i += n_groups
+        init_one = functools.partial(block_init, cfg=cfg, kind=kind,
+                                     dtype=dtype, with_cross=with_cross)
+        params["groups"].append(jax.vmap(lambda k: init_one(k))(slot_keys)
+                                if n_groups else {})
+    for r in range(rem):
+        kind = pattern[r % len(pattern)]
+        params["rem"].append(block_init(keys[i], cfg, kind, dtype, with_cross))
+        i += 1
+    return params
+
+
+def stack_caches(cfg: ModelConfig, *, n_layers: int, pattern: tuple,
+                 batch: int, s_max: int, dtype, with_cross: bool,
+                 enc_seq: int = 0):
+    n_groups, rem = stack_layout(cfg, n_layers, pattern)
+    caches: dict = {"groups": [], "rem": []}
+    for kind in pattern:
+        one = init_block_cache(cfg, kind, batch, s_max, dtype, with_cross,
+                               enc_seq)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(), one)
+        caches["groups"].append(stacked)
+    for r in range(rem):
+        kind = pattern[r % len(pattern)]
+        caches["rem"].append(
+            init_block_cache(cfg, kind, batch, s_max, dtype, with_cross,
+                             enc_seq))
+    return caches
+
+
+def stack_apply(params, cfg: ModelConfig, x, *, pattern: tuple, mode: str,
+                positions, caches=None, cache_pos=None, enc_out=None,
+                remat: str = "none", q_block: int = 1024,
+                kv_block: int = 1024):
+    """Run the stack.  Returns (x, caches', aux_sum)."""
+    n_groups = jax.tree.leaves(params["groups"][0])[0].shape[0] \
+        if params["groups"] and jax.tree.leaves(params["groups"][0]) else 0
+    with_caches = caches is not None
+    build_caches = with_caches or mode == "prefill"
+
+    def group_body(x, group_params, group_caches):
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for slot, kind in enumerate(pattern):
+            c = group_caches[slot] if with_caches else None
+            x, c2, a = block_apply(group_params[slot], cfg, kind, x,
+                                   positions=positions, mode=mode, cache=c,
+                                   cache_pos=cache_pos, enc_out=enc_out,
+                                   q_block=q_block, kv_block=kv_block)
+            aux = aux + a
+            new_caches.append(c2)
+        return x, new_caches, aux
+
+    if remat == "full":
+        group_body = jax.checkpoint(group_body)
+    elif remat == "dots":
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    if n_groups:
+        if with_caches:
+            def scan_fn(x, sliced):
+                g_params, g_caches = sliced
+                x, new_c, aux = group_body(x, g_params, g_caches)
+                return x, (new_c, aux)
+            x, (new_group_caches, auxs) = jax.lax.scan(
+                scan_fn, x, (params["groups"], caches["groups"]))
+        else:
+            def scan_fn(x, g_params):
+                x, new_c, aux = group_body(x, g_params, None)
+                return x, (new_c, aux)
+            # train: new_c is None (empty pytree); prefill: stacked caches
+            x, (new_group_caches, auxs) = jax.lax.scan(
+                scan_fn, x, params["groups"])
+        aux_total = jnp.sum(auxs)
+    else:
+        if with_caches:
+            new_group_caches = caches["groups"]
+        elif build_caches:
+            new_group_caches = [{} for _ in pattern]
+        else:
+            new_group_caches = None
+        aux_total = jnp.zeros((), jnp.float32)
+
+    new_rem = []
+    for r, bp in enumerate(params["rem"]):
+        kind = pattern[r % len(pattern)]
+        c = caches["rem"][r] if with_caches else None
+        x, c2, a = block_apply(bp, cfg, kind, x, positions=positions,
+                               mode=mode, cache=c, cache_pos=cache_pos,
+                               enc_out=enc_out, q_block=q_block,
+                               kv_block=kv_block)
+        aux_total = aux_total + a
+        new_rem.append(c2)
+
+    new_caches = ({"groups": new_group_caches, "rem": new_rem}
+                  if build_caches else None)
+    return x, new_caches, aux_total

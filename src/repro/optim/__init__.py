@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr  # noqa: F401
+from repro.optim.sharding import batch_axes, input_specs_pytree, param_specs  # noqa: F401

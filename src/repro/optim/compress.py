@@ -1,0 +1,129 @@
+"""FD top-k gradient compression for the slow cross-pod (DCN) axis.
+
+The paper's insight applied to distributed optimization: never ship the
+payload (the dense gradient) across the slow link — ship fixed-size
+(score, address) lists and reconstruct.  Mapping:
+
+  peer                  -> pod (the "pod" mesh axis, DCN-connected)
+  local query execution -> per-block top-|g| selection (Pallas local_topk)
+  score-list            -> (value, global index) k-lists per block
+  merge-and-backward    -> ppermute tree / all-gather of k-lists over pods
+  data retrieval        -> sparse scatter-add of the k winners (only k
+                           values ever cross the DCN, paper's m_rt <= 2k)
+  k-inflation (Lemma 4) -> k_eff = k / (1 - p_drop) compensates pods whose
+                           contribution is lost to failures
+  urgent score-lists    -> error feedback: what wasn't sent this round is
+                           accumulated and bubbles up in a later round
+
+Compression ratio per tensor: dense 4*n bytes -> 8*k_eff bytes per pod.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk import local_topk
+
+
+def inflate_k(k: int, p_drop: float) -> int:
+    """Paper Lemma 4: request k/(1-P) so that k survive in expectation."""
+    if not 0.0 <= p_drop < 1.0:
+        raise ValueError(f"p_drop must be in [0,1), got {p_drop}")
+    return int(math.ceil(k / (1.0 - p_drop)))
+
+
+class CompressState(NamedTuple):
+    """Error-feedback accumulator, same pytree structure as the grads."""
+    ef: object
+
+
+def compress_init(grads_like) -> CompressState:
+    return CompressState(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+# --------------------------------------------------------------------------
+# per-tensor local phase (pure — unit-testable without a mesh)
+# --------------------------------------------------------------------------
+
+def topk_sparsify(g: jax.Array, k: int, ef: jax.Array):
+    """Select the k largest-|.| entries of (g + ef).
+
+    Returns (vals (k,), idx (k,), new_ef) where new_ef holds everything
+    NOT selected (error feedback).  vals are the signed values.
+    """
+    acc = g.astype(jnp.float32).reshape(-1) + ef.reshape(-1)
+    mag = jnp.abs(acc)
+    _, idx = local_topk(mag, k)
+    vals = jnp.take(acc, idx)
+    new_ef = acc.at[idx].set(0.0).reshape(ef.shape)
+    return vals, idx, new_ef
+
+
+def sparse_to_dense(vals, idx, n: int):
+    return jnp.zeros((n,), jnp.float32).at[idx].add(vals)
+
+
+# --------------------------------------------------------------------------
+# distributed phase: FD merge of sparse contributions over the pod axis
+# --------------------------------------------------------------------------
+
+def fd_sparse_allreduce_shard(g, ef, *, k: int, axis_name: str,
+                              axis_size: int):
+    """Inside shard_map over the DCN axis: approximate mean of ``g``.
+
+    Each pod ships only its k-list; every pod reconstructs the sparse sum.
+    Returns (g_hat, new_ef).  Exact when the union of selections covers
+    all non-zeros.
+    """
+    n = g.size
+    shape = g.shape
+    vals, idx, new_ef = topk_sparsify(g, k, ef)
+    # bubble every pod's list to every pod (k*axis_size couples on the wire,
+    # vs n dense values for the baseline all-reduce)
+    all_v = jax.lax.all_gather(vals, axis_name)        # (P, k)
+    all_i = jax.lax.all_gather(idx, axis_name)         # (P, k)
+    dense = jnp.zeros((n,), jnp.float32).at[all_i.reshape(-1)].add(
+        all_v.reshape(-1))
+    g_hat = (dense / axis_size).reshape(shape)
+    return g_hat.astype(g.dtype), new_ef
+
+
+def fd_sparse_allreduce(grads, ef_state: CompressState, mesh,
+                        *, axis: str = "pod", k_frac: float = 1e-3,
+                        p_drop: float = 0.0):
+    """Tree-wise compressed mean over the ``axis`` mesh axis.
+
+    grads leaves must be identical-shaped across pods (e.g. after in-pod
+    psum).  k per leaf = inflate_k(ceil(k_frac * n), p_drop).
+    """
+    from jax.sharding import PartitionSpec as P
+    axis_size = mesh.shape[axis]
+
+    def leaf_fn(g, ef):
+        k = inflate_k(max(1, int(k_frac * g.size)), p_drop)
+
+        fn = functools.partial(fd_sparse_allreduce_shard, k=k,
+                               axis_name=axis, axis_size=axis_size)
+        spec = P(*([None] * g.ndim))
+        return jax.shard_map(fn, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=(spec, spec),
+                             check_vma=False)(g, ef)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state.ef)
+    out = [leaf_fn(g, e) for g, e in zip(flat_g, flat_e)]
+    g_hat = treedef.unflatten([o[0] for o in out])
+    new_ef = treedef.unflatten([o[1] for o in out])
+    return g_hat, CompressState(new_ef)
+
+
+def compression_ratio(n: int, k: int, n_pods: int) -> float:
+    """Dense all-reduce bytes / FD compressed bytes (per DCN link)."""
+    dense = 4 * n * 2 * (n_pods - 1) / n_pods       # ring all-reduce
+    sparse = 8 * k * (n_pods - 1)                   # k-lists each way
+    return dense / max(sparse, 1)

@@ -1,0 +1,297 @@
+"""Parameter partition rules: TP over ``model``, FSDP over ``data``/``pod``.
+
+The rules implement the distribution design in DESIGN.md §6:
+
+  * tensor parallelism over the ``model`` axis for every dim that divides
+    evenly — attention heads (only when n_heads %% model_size == 0; else the
+    attention math is replicated and its weights are ZeRO-sharded), FFN
+    hidden, per-expert hidden, RG-LRU width, vocab (embedding + LM head);
+  * ZeRO-3-style FSDP over ``("pod", "data")`` on a remaining dim — XLA
+    inserts the all-gather-on-use / reduce-scatter-on-grad;
+  * everything 1-D (biases, norms, decays) replicated unless model-sharded
+    by construction.
+
+``param_specs(params, cfg, mesh)`` returns a PartitionSpec pytree aligned
+with the parameter pytree.  Scanned stacks (``groups``) get a leading
+``None`` for the layer dim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP_AXES = ("pod", "data")
+MODEL = "model"
+
+
+def _axes_size(mesh_shape: dict, axes) -> int:
+    return math.prod(mesh_shape.get(a, 1) for a in axes)
+
+
+def _fit(axes, dim: int, mesh_shape: dict):
+    """Return ``axes`` (str | tuple | None) trimmed so dim %% size == 0."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if dim % mesh_shape.get(axes, 1) == 0 else None
+    # tuple: drop leading axes until it fits ("pod","data") -> ("data",)
+    t = tuple(a for a in axes if a in mesh_shape)
+    while t and dim % _axes_size(mesh_shape, t) != 0:
+        t = t[1:]
+    return t if t else None
+
+
+def _mk(spec_axes, shape, mesh_shape) -> P:
+    fitted = []
+    for d, ax in enumerate(spec_axes):
+        fitted.append(_fit(ax, shape[d], mesh_shape))
+    return P(*fitted)
+
+
+def fsdp_axes(mesh_shape: dict):
+    return tuple(a for a in FSDP_AXES if a in mesh_shape)
+
+
+def batch_axes(mesh_shape: dict):
+    """Axes the global batch is sharded over."""
+    return tuple(a for a in FSDP_AXES if a in mesh_shape)
+
+
+# --------------------------------------------------------------------------
+# rule table
+# --------------------------------------------------------------------------
+
+def _rules_for(kind: str, name: str, cfg: ModelConfig, mesh_shape: dict,
+               ndim: int):
+    """Logical axes (pre-fit) for a leaf ``name`` inside a ``kind`` block."""
+    msize = mesh_shape.get(MODEL, 1)
+    F = fsdp_axes(mesh_shape)
+    attn_tp = cfg.n_heads % msize == 0 and cfg.attn_kind != "mla"
+    kv_tp = attn_tp and cfg.n_kv_heads % msize == 0
+
+    if kind == "attn":
+        if name == "w_q":
+            return (F, MODEL) if attn_tp else (F, None)
+        if name in ("w_k", "w_v"):
+            return (F, MODEL) if kv_tp else (F, None)
+        if name == "w_o":
+            return (MODEL, F) if attn_tp else (F, None)
+        if name == "b_q":
+            return (MODEL,) if attn_tp else (None,)
+        if name in ("b_k", "b_v"):
+            return (MODEL,) if kv_tp else (None,)
+        # MLA projections: latent ranks don't head-align; ZeRO only
+        if name in ("w_dq", "w_uq", "w_dkv", "w_uk", "w_uv"):
+            return (F, None)
+    if kind == "rwkv":
+        if name in ("w_r", "w_k", "w_v", "w_g", "w_o", "lora_wa"):
+            return (F, None)
+        if name == "lora_wb":
+            return (None, F)
+    if kind == "rglru":
+        if name in ("w_x", "w_gate"):
+            return (F, MODEL)
+        if name == "conv_w":
+            return (None, MODEL)
+        if name in ("conv_b", "lam"):
+            return (MODEL,)
+        if name in ("w_a", "w_i"):
+            return (MODEL, None, None)
+        if name == "w_out":
+            return (MODEL, F)
+    if kind == "ffn":
+        if name in ("w_gate", "w_up", "w_k"):      # w_k = rwkv cmix up-proj
+            return (F, MODEL)
+        if name == "b_up":
+            return (MODEL,)
+        if name in ("w_down", "w_v"):              # w_v = rwkv cmix down-proj
+            return (MODEL, F)
+        if name == "w_r":                          # cmix receptance
+            return (F, None)
+    if kind == "moe":
+        # EXPERT-PARALLEL: whole experts sharded over the model axis
+        # (E % model == 0 for both assigned MoE archs: 64/16, 32/16).
+        # Both operands of the batched expert GEMM are then E-sharded —
+        # the GEMMs run with ZERO model-axis communication; the combine
+        # pays one (E/TP·C, D) all-gather instead of TP-on-F's (E·C, D)
+        # all-reduce (§Perf cell B iteration B4).  ZeRO-1: optimizer
+        # state / grad accumulator additionally data-sharded
+        # (opt_state_specs).
+        if name == "router":
+            return (None, None)
+        if name in ("w_gate", "w_up", "w_down"):
+            return (MODEL, None, None)
+    # default: replicate
+    return (None,) * ndim
+
+
+def _classify(path_tokens: list, cfg: ModelConfig):
+    """(kind, name, n_scan_dims) for a parameter path."""
+    name = path_tokens[-1]
+    scan = 1 if "groups" in path_tokens else 0
+    # encoder stacks are pure attn; decoder slot kind from the pattern
+    if "enc" in path_tokens:
+        kind = "attn"
+    else:
+        kind = "attn"
+        if "groups" in path_tokens:
+            slot = int(path_tokens[path_tokens.index("groups") + 1])
+            kind = cfg.mixer_pattern[slot]
+        elif "rem" in path_tokens:
+            r = int(path_tokens[path_tokens.index("rem") + 1])
+            kind = cfg.mixer_pattern[r % len(cfg.mixer_pattern)]
+    if "cross" in path_tokens:
+        kind = "attn"
+    if "ffn" in path_tokens:
+        if "shared" in path_tokens:
+            kind = "ffn"
+        elif cfg.moe is not None:
+            kind = "moe"
+        else:
+            kind = "ffn"
+    if "mixer" not in path_tokens and "ffn" not in path_tokens \
+            and "cross" not in path_tokens:
+        kind = "top"
+    return kind, name, scan
+
+
+def _top_level_spec(name: str, shape, cfg: ModelConfig, mesh_shape):
+    F = fsdp_axes(mesh_shape)
+    if name == "embed":
+        return _mk((MODEL, F), shape, mesh_shape)
+    if name == "w_lm":
+        return _mk((F, MODEL), shape, mesh_shape)
+    if name == "pos_embed":
+        return _mk((None, F), shape, mesh_shape)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params, cfg: ModelConfig, mesh) -> "jax.tree":
+    """PartitionSpec pytree for a parameter pytree."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        if hasattr(mesh, "devices") else dict(mesh.shape)
+
+    def one(path, leaf):
+        toks = []
+        for k in path:
+            if hasattr(k, "key"):
+                toks.append(str(k.key))
+            elif hasattr(k, "idx"):
+                toks.append(str(k.idx))
+            else:
+                toks.append(str(k))
+        kind, name, scan = _classify(toks, cfg)
+        shape = leaf.shape
+        if kind == "top":
+            # norms / scalar leaves inside blocks (norm1, ln_x, q_norm, ...)
+            if name in ("embed", "w_lm", "pos_embed"):
+                return _top_level_spec(name, shape, cfg, mesh_shape)
+            return P(*([None] * len(shape)))
+        core_shape = shape[scan:]
+        axes = _rules_for(kind, name, cfg, mesh_shape, len(core_shape))
+        spec = _mk(axes, core_shape, mesh_shape)
+        return P(*([None] * scan), *spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_specs(params, cfg: ModelConfig, mesh):
+    """Optimizer-state (and grad-accumulator) specs: parameter specs plus
+    ZeRO-1 data-sharding of the MoE expert dims that params keep
+    replicated (grads then REDUCE-SCATTER over data once per microbatch
+    instead of all-reducing the full expert tensors)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        if hasattr(mesh, "devices") else dict(mesh.shape)
+    F = fsdp_axes(mesh_shape)
+    base = param_specs(params, cfg, mesh)
+    if cfg.moe is None or not F:
+        return base
+
+    def fix(path, leaf, spec):
+        toks = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        name = toks[-1]
+        if "ffn" in toks and "shared" not in toks and \
+                name in ("w_gate", "w_up", "w_down"):
+            scan = 1 if "groups" in toks else 0
+            core = list(spec[scan:])
+            # shard the D dim over the data axes (E stays model-sharded)
+            d_dim = 1 if name in ("w_gate", "w_up") else 2
+            fitted = _fit(F, leaf.shape[scan + d_dim], mesh_shape)
+            core[d_dim] = fitted
+            return P(*([None] * scan), *core)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(fix, params, base)
+
+
+# --------------------------------------------------------------------------
+# decode-state specs (KV caches & recurrent states)
+# --------------------------------------------------------------------------
+
+def decode_state_specs(state_like, cfg: ModelConfig, mesh, *, s_max: int):
+    """Cache sharding: batch over the data axes; the long sequence (or
+    window) dim of attention caches over ``model``.
+
+    Sequence-sharding the KV cache is the TPU-native way to fit 32k-token
+    caches per device regardless of head-count divisibility (heads don't
+    divide 16 for most assigned archs); the decode attention reduces over
+    the sharded seq axis with small (B,H) all-reduces — the FD principle
+    (ship reductions, not payloads) applied to attention.
+    """
+    mesh_shape = dict(mesh.shape)
+    baxes = batch_axes(mesh_shape)
+    bsize = _axes_size(mesh_shape, baxes)
+    msize = mesh_shape.get(MODEL, 1)
+    window = cfg.local_window
+    seq_dims = {s_max, window, cfg.encoder_seq} - {0}
+
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        shape = leaf.shape
+        if name == "pos_slots" or (shape and shape[-1:] == shape
+                                   and len(shape) == 1):
+            d = shape[0]
+            return P(MODEL) if d in seq_dims and d % msize == 0 else P()
+        if not shape:
+            return P()
+        spec = [None] * len(shape)
+        # batch dim: first dim after the scan-stack dim(s).  Cache leaves
+        # under "groups" carry a leading n_groups dim.
+        b_dim = 1 if "groups" in [getattr(k, "key", None) for k in path] \
+            else 0
+        if len(shape) > b_dim and baxes and shape[b_dim] % bsize == 0 \
+                and shape[b_dim] >= bsize:
+            spec[b_dim] = baxes
+        for d in range(b_dim + 1, len(shape)):
+            if shape[d] in seq_dims and shape[d] % msize == 0:
+                spec[d] = MODEL
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, state_like)
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+def input_specs_pytree(batch_like, mesh, *, batch_dim: int = 0):
+    """Shard every input leaf's batch dim over the data axes (replicate if
+    the batch doesn't divide, e.g. long_500k's global_batch=1)."""
+    mesh_shape = dict(mesh.shape)
+    baxes = batch_axes(mesh_shape)
+    bsize = _axes_size(mesh_shape, baxes)
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) > batch_dim and shape[batch_dim] % bsize == 0 and baxes:
+            spec[batch_dim] = baxes
+        return P(*spec)
+
+    return jax.tree.map(one, batch_like)

@@ -1,0 +1,4 @@
+from repro.p2psim.graph import Topology, barabasi_albert, waxman  # noqa: F401
+from repro.p2psim.metrics import QueryMetrics  # noqa: F401
+from repro.p2psim.simulate import (  # noqa: F401
+    SimParams, run_query, run_statistics_heuristic)

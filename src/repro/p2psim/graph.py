@@ -1,0 +1,158 @@
+"""BRITE-like topology generation (paper §5.1).
+
+BRITE's two standard models are implemented:
+  * Barabási–Albert preferential attachment (BRITE "BA") — power-law
+    degrees, the shape observed for Gnutella; ``m=2`` gives the paper's
+    average degree d(G) ≈ 4 [16].
+  * Waxman (BRITE "RTWaxman") — random geometric with exponential
+    distance decay.
+
+Topologies are connected by construction (BA) or post-connected by
+bridging components (Waxman).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Topology:
+    n: int
+    neighbors: List[np.ndarray]          # adjacency lists (sorted int32)
+    kind: str = "ba"
+
+    @property
+    def n_edges(self) -> int:
+        return sum(len(a) for a in self.neighbors) // 2
+
+    def degree(self) -> np.ndarray:
+        return np.array([len(a) for a in self.neighbors])
+
+    def avg_degree(self) -> float:
+        return 2.0 * self.n_edges / self.n
+
+    def edge_set(self):
+        for u in range(self.n):
+            for v in self.neighbors[u]:
+                if u < v:
+                    yield (u, int(v))
+
+
+def _to_topology(adj: List[set], kind: str) -> Topology:
+    return Topology(
+        n=len(adj),
+        neighbors=[np.array(sorted(a), dtype=np.int32) for a in adj],
+        kind=kind)
+
+
+def barabasi_albert(n: int, m: int = 2, seed: int = 0) -> Topology:
+    """BA preferential attachment; avg degree -> 2m (paper's d(G)=4)."""
+    rng = np.random.default_rng(seed)
+    adj: List[set] = [set() for _ in range(n)]
+    # seed clique of m+1 nodes
+    core = m + 1
+    for u in range(core):
+        for v in range(u + 1, core):
+            adj[u].add(v)
+            adj[v].add(u)
+    # degree-proportional target sampling via repeated-endpoint list
+    targets = []
+    for u in range(core):
+        targets.extend([u] * len(adj[u]))
+    for u in range(core, n):
+        chosen: set = set()
+        while len(chosen) < min(m, u):
+            cand = int(targets[rng.integers(len(targets))])
+            if cand != u:
+                chosen.add(cand)
+        for v in chosen:
+            adj[u].add(v)
+            adj[v].add(u)
+            targets.extend([u, v])
+    return _to_topology(adj, "ba")
+
+
+def waxman(n: int, alpha: float = 0.15, beta: float = 0.2,
+           avg_degree: float = 4.0, seed: int = 0) -> Topology:
+    """Waxman: P(u~v) = beta * exp(-d(u,v) / (alpha * L)).
+
+    Edge probability is globally rescaled to hit ``avg_degree``; the
+    result is connected by bridging components along nearest pairs.
+    """
+    rng = np.random.default_rng(seed)
+    pos = rng.random((n, 2))
+    d = np.sqrt(((pos[:, None] - pos[None]) ** 2).sum(-1))
+    L = np.sqrt(2.0)
+    p = beta * np.exp(-d / (alpha * L))
+    np.fill_diagonal(p, 0.0)
+    target_edges = avg_degree * n / 2.0
+    p *= target_edges / (p.sum() / 2.0)
+    upper = np.triu(rng.random((n, n)) < p, k=1)
+    adj: List[set] = [set() for _ in range(n)]
+    for u, v in zip(*np.nonzero(upper)):
+        adj[int(u)].add(int(v))
+        adj[int(v)].add(int(u))
+    # connect components
+    comp = _components(adj)
+    while len(set(comp)) > 1:
+        c0 = np.flatnonzero(comp == comp[0])
+        c1 = np.flatnonzero(comp != comp[0])
+        dd = d[np.ix_(c0, c1)]
+        i, j = np.unravel_index(np.argmin(dd), dd.shape)
+        u, v = int(c0[i]), int(c1[j])
+        adj[u].add(v)
+        adj[v].add(u)
+        comp = _components(adj)
+    return _to_topology(adj, "waxman")
+
+
+def _components(adj: List[set]) -> np.ndarray:
+    n = len(adj)
+    comp = -np.ones(n, dtype=np.int64)
+    cur = 0
+    for s in range(n):
+        if comp[s] >= 0:
+            continue
+        stack = [s]
+        comp[s] = cur
+        while stack:
+            u = stack.pop()
+            for v in adj[u]:
+                if comp[v] < 0:
+                    comp[v] = cur
+                    stack.append(v)
+        cur += 1
+    return comp
+
+
+def bfs_tree(top: Topology, origin: int, ttl: int):
+    """(parent, depth, reached): the implicit spanning tree of the flood.
+
+    parent[origin] = -1; unreached peers have depth = -1.
+    """
+    n = top.n
+    parent = -np.ones(n, dtype=np.int64)
+    depth = -np.ones(n, dtype=np.int64)
+    depth[origin] = 0
+    frontier = [origin]
+    lvl = 0
+    while frontier and lvl < ttl:
+        nxt = []
+        for u in frontier:
+            for v in top.neighbors[u]:
+                if depth[v] < 0:
+                    depth[v] = lvl + 1
+                    parent[v] = u
+                    nxt.append(int(v))
+        frontier = nxt
+        lvl += 1
+    return parent, depth, depth >= 0
+
+
+def eccentricity_ttl(top: Topology, origin: int) -> int:
+    """Smallest TTL reaching every peer (paper: TTL=12 reaches 10k)."""
+    _, depth, _ = bfs_tree(top, origin, top.n)
+    return int(depth.max())

@@ -1,0 +1,41 @@
+"""Message / byte / time / accuracy accounting (paper §3.2, §5)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+# paper §3.2: L = 10 B per couple (4 B score + 6 B address)
+ENTRY_BYTES_PAPER = 10
+QUERY_BYTES = 100            # forward message payload (Q + QID + TTL + addr)
+
+
+@dataclasses.dataclass
+class QueryMetrics:
+    algorithm: str = "fd"
+    n_reached: int = 0
+    n_edges_pq: int = 0
+    avg_degree: float = 0.0
+
+    m_fw: int = 0            # forward messages
+    m_bw: int = 0            # backward messages
+    m_rt: int = 0            # retrieve messages (requests + returns)
+    b_fw: int = 0            # forward bytes
+    b_bw: int = 0            # backward bytes
+    b_rt: int = 0            # retrieve bytes (incl. data items)
+
+    response_time_s: float = 0.0
+    accuracy: float = 1.0    # ac_Q = |T_Q ∩ T_r| / |T_Q|
+
+    @property
+    def total_messages(self) -> int:
+        return self.m_fw + self.m_bw + self.m_rt
+
+    @property
+    def total_bytes(self) -> int:
+        return self.b_fw + self.b_bw + self.b_rt
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["total_messages"] = self.total_messages
+        d["total_bytes"] = self.total_bytes
+        return d

@@ -1,0 +1,149 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute   = HLO_FLOPs / peak_FLOPs            (per chip — the SPMD
+    memory    = HLO_bytes / HBM_bw                  module is per-device)
+    collective= collective_bytes / link_bw
+
+``collective_bytes`` is not in cost_analysis: we parse the post-SPMD HLO
+text and sum the operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction (shapes in
+the per-device module are shard shapes, so the result is bytes crossing
+this chip's links).
+
+Hardware constants: TPU v5e-ish — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (4 links/chip on a 2D torus; we charge the serialized
+per-chip byte stream against one link, the conservative bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    link_bw: float = 50e9            # bytes/s per ICI link
+    dcn_bw: float = 6.25e9           # bytes/s per host NIC (multi-pod axis)
+
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+# instruction definition: "  %name = <shape-or-tuple> opcode(...)"
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] group in ``text`` (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str,
+                              per_op: bool = False):
+    """Sum operand bytes of collective ops in (post-SPMD, per-device) HLO.
+
+    Operand shapes are read from each instruction's own operand list —
+    HLO text includes typed operands, e.g.
+      %ag = f32[512,128] all-gather(f32[32,128] %p), replica_groups=...
+    For start/done pairs (async collectives) only the -start is counted.
+    """
+    totals: Dict[str, int] = {op: 0 for op in _COLL_OPS}
+    counts: Dict[str, int] = {op: 0 for op in _COLL_OPS}
+    name_shape: Dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # record def shape (text up to the opcode) for operand lookup
+        paren = rhs.find("(")
+        head = rhs[:paren] if paren > 0 else rhs
+        name_shape[name] = head
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        opm = re.search(r"\b(" + "|".join(_COLL_OPS) + r")(-start)?\(", rhs)
+        if not opm:
+            continue
+        if re.search(r"\b(all-gather|all-reduce|all-to-all|"
+                     r"reduce-scatter|collective-permute)-done\b", rhs):
+            continue
+        op = opm.group(1)
+        # operand section: inside the first (...) after the opcode
+        start = rhs.find("(", opm.start())
+        depth, end = 0, start
+        for i in range(start, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = rhs[start + 1:end]
+        b = _shape_bytes(operands)
+        if b == 0:
+            # untyped operands (%ref only): look up definitions
+            for ref in re.findall(r"%([\w.\-]+)", operands):
+                b += _shape_bytes(name_shape.get(ref, ""))
+        totals[op] += b
+        counts[op] += 1
+    out = {"total": sum(totals.values()), "by_op": totals,
+           "counts": counts}
+    return out if per_op else out["total"]
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, hw: HW = HW(),
+                   model_flops: Optional[float] = None,
+                   chips: int = 1) -> dict:
+    """Three terms in seconds (per-device module convention) + verdict."""
+    compute_s = hlo_flops / hw.peak_flops
+    memory_s = hlo_bytes / hw.hbm_bw
+    coll_s = collective_bytes / hw.link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    out = {**terms, "dominant": dominant, "bound_s": bound, "chips": chips}
+    if model_flops is not None and hlo_flops:
+        out["model_flops"] = model_flops
+        out["useful_flops_ratio"] = model_flops / (hlo_flops * chips)
+        # roofline fraction: useful model FLOPs per chip over what the
+        # dominant term allows
+        out["roofline_frac"] = (model_flops / chips / hw.peak_flops) / bound
+    return out
+
+
+def model_flops_estimate(cfg, shape, *, mode: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode: D=B tokens."""
+    n_active = cfg.param_count(active_only=True)
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,404 @@
+"""HLO text analyzer with while-loop trip-count weighting.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a scanned
+80-layer stack reports 1/80th of the real FLOPs (verified empirically:
+a scan of 4 dots reports exactly one dot's flops).  The roofline needs
+executed totals, so we parse the post-SPMD HLO text ourselves:
+
+  * computations are parsed into instruction lists with a name->shape map
+    (operands are referenced by name in compiled HLO),
+  * ``while`` ops multiply their body/condition by the trip count
+    recovered from the condition computation's integer ``constant(N)``
+    (scan lowering: induction from 0, step 1, compare LT),
+  * dot FLOPs = 2 * prod(output dims) * prod(lhs contracting dims),
+  * bytes = operand + output bytes at fusion boundaries (fusion
+    internals live in registers — matches XLA's HBM-traffic view),
+  * collective bytes = operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute; shapes in the
+    per-device SPMD module are shard shapes, so totals are per-chip.
+
+Everything is derived from the executable artifact, not the source
+model — remat recompute, SPMD-inserted collectives and padding waste are
+all visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INST = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "copy-start", "copy-done", "after-all"}
+
+
+def _parse_dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _parse_dims(dims):
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_text: str
+    opcode: str
+    operands_text: str
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr]
+    shapes: Dict[str, str]     # instr name -> result type text
+
+
+_RESULT_RE = re.compile(r"^[a-z0-9]+\[[0-9,]*\](?:\{[^{}]*\})?")
+_OPCODE_RE = re.compile(r"^([\w\-]+)\(")
+
+
+def _split_instr(rhs: str):
+    """rhs: '<result-type> opcode(<operands>), attrs...'.
+
+    The result type is either 'dtype[dims]{layout}' or a parenthesised
+    tuple of such (while/rng-bit-generator/...).
+    """
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        out_text = rhs[:end + 1]
+        rest = rhs[end + 1:].strip()
+    else:
+        m = _RESULT_RE.match(rhs)
+        if not m:
+            return None
+        out_text = m.group(0)
+        rest = rhs[m.end():].strip()
+    mo = _OPCODE_RE.match(rest)
+    if not mo:
+        return None
+    opcode = mo.group(1)
+    start = mo.end() - 1
+    depth = 0
+    end = start
+    for k2 in range(start, len(rest)):
+        if rest[k2] == "(":
+            depth += 1
+        elif rest[k2] == ")":
+            depth -= 1
+            if depth == 0:
+                end = k2
+                break
+    return out_text, opcode, rest[start + 1:end], rest[end + 1:]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            s = line.strip()
+            if s.endswith("{") and "->" in s and ("(" in s):
+                is_entry = s.startswith("ENTRY")
+                if is_entry:
+                    s = s[len("ENTRY"):].strip()
+                name = s.split("(", 1)[0].strip().lstrip("%").strip()
+                if name:
+                    cur = Computation(name, is_entry, [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            if cur.is_entry:
+                comps["__entry__"] = cur
+            cur = None
+            continue
+        m = _INST.match(line)
+        if not m:
+            continue
+        iname, rhs = m.groups()
+        sp = _split_instr(rhs)
+        if sp is None:
+            continue
+        out_text, opcode, operands, attrs = sp
+        cur.instrs.append(Instr(iname, out_text, opcode, operands, attrs))
+        cur.shapes[iname] = out_text
+    return comps
+
+
+def _operand_bytes(inst: Instr, shapes: Dict[str, str]) -> int:
+    b = _shape_bytes(inst.operands_text)
+    if b:
+        return b
+    total = 0
+    for ref in re.findall(r"%([\w.\-]+)", inst.operands_text):
+        total += _shape_bytes(shapes.get(ref, ""))
+    return total
+
+
+def _first_operand_shape(inst: Instr, shapes: Dict[str, str]) -> List[int]:
+    m = _SHAPE_RE.search(inst.operands_text)
+    if m and m.group(1) in DTYPE_BYTES:
+        return _parse_dims(m.group(2))
+    refs = re.findall(r"%([\w.\-]+)", inst.operands_text)
+    if refs:
+        mm = _SHAPE_RE.search(shapes.get(refs[0], ""))
+        if mm:
+            return _parse_dims(mm.group(2))
+    return []
+
+
+def _out_elems(inst: Instr) -> int:
+    m = _SHAPE_RE.search(inst.out_text)
+    if not m or m.group(1) not in DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in _parse_dims(m.group(2)):
+        n *= d
+    return n
+
+
+def _dot_flops(inst: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = _out_elems(inst)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+    cdims = _parse_dims(m.group(1)) if m else []
+    lhs_dims = _first_operand_shape(inst, shapes)
+    csize = 1
+    for c in cdims:
+        if c < len(lhs_dims):
+            csize *= lhs_dims[c]
+    return 2.0 * out_elems * csize
+
+
+def _conv_flops(inst: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = _out_elems(inst)
+    refs = re.findall(r"%([\w.\-]+)", inst.operands_text)
+    ker = 1
+    if len(refs) >= 2:
+        mm = _SHAPE_RE.search(shapes.get(refs[1], ""))
+        if mm:
+            kd = _parse_dims(mm.group(2))
+            for d in kd[:-1]:
+                ker *= d
+    return 2.0 * out_elems * ker
+
+
+def _while_trip_count(comps, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+
+    def scan_comp(c):
+        for inst in c.instrs:
+            if inst.opcode == "constant" and \
+                    inst.out_text.split("[")[0] in ("s32", "u32", "s64",
+                                                    "u64"):
+                mm = re.search(r"(\d+)", inst.operands_text)
+                if mm:
+                    consts.append(int(mm.group(1)))
+            elif inst.opcode == "fusion":
+                mcall = re.search(r"calls=%?([\w.\-]+)", inst.attrs)
+                if mcall and mcall.group(1) in comps:
+                    scan_comp(comps[mcall.group(1)])
+
+    scan_comp(cond)
+    return max(consts) if consts else 1
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    convert_bytes: float = 0.0   # CPU float-normalization artifacts: XLA:CPU
+    # has no native bf16, so it wraps bf16 ops in convert pairs (observed:
+    # the whole stacked KV cache converted per layer).  These do not exist
+    # on the TPU target, so they are tracked separately and EXCLUDED from
+    # bytes_accessed; EXPERIMENTS.md reports both.
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    trip_counts: dict = dataclasses.field(default_factory=dict)
+
+
+def analyze(text: str) -> Totals:
+    comps = parse_hlo(text)
+    tot = Totals(coll_by_op={o: 0.0 for o in _COLL_OPS},
+                 coll_counts={o: 0 for o in _COLL_OPS})
+    if "__entry__" not in comps:
+        return tot
+    fusion_flops_cache: Dict[str, float] = {}
+
+    def fusion_flops(comp_name: str) -> float:
+        if comp_name in fusion_flops_cache:
+            return fusion_flops_cache[comp_name]
+        c = comps.get(comp_name)
+        f = 0.0
+        if c is not None:
+            for inst in c.instrs:
+                if inst.opcode == "dot":
+                    f += _dot_flops(inst, c.shapes)
+                elif inst.opcode == "convolution":
+                    f += _conv_flops(inst, c.shapes)
+                elif inst.opcode == "fusion":
+                    mcall = re.search(r"calls=%?([\w.\-]+)", inst.attrs)
+                    if mcall:
+                        f += fusion_flops(mcall.group(1))
+        fusion_flops_cache[comp_name] = f
+        return f
+
+    fusion_traffic_cache: Dict[str, float] = {}
+
+    def fusion_traffic(comp_name: str) -> Optional[float]:
+        """Effective HBM traffic of a fusion: parameters consumed only by
+        dynamic-slice are charged at slice size (scan xs reads), and a
+        dynamic-update-slice root aliases its buffer in place (scan ys
+        writes) — charging the full stacked buffer per layer iteration
+        would overstate traffic by the layer count."""
+        if comp_name in fusion_traffic_cache:
+            return fusion_traffic_cache[comp_name]
+        c = comps.get(comp_name)
+        if c is None:
+            return None
+        total = 0.0
+        uses: Dict[str, List[Instr]] = {}
+        for inst in c.instrs:
+            for ref in re.findall(r"%([\w.\-]+)", inst.operands_text):
+                uses.setdefault(ref, []).append(inst)
+        root = c.instrs[-1] if c.instrs else None
+        dus_alias = None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            refs = re.findall(r"%([\w.\-]+)", root.operands_text)
+            if refs:
+                dus_alias = refs[0]           # the aliased big buffer
+                upd = refs[1] if len(refs) > 1 else None
+                total += 2 * _shape_bytes(c.shapes.get(upd, "")) \
+                    if upd else 0             # read+write of the slice
+        else:
+            total += _shape_bytes(root.out_text) if root else 0
+        for inst in c.instrs:
+            if inst.opcode != "parameter":
+                continue
+            if inst.name == dus_alias:
+                continue                      # in-place alias: free
+            u = uses.get(inst.name, [])
+            if u and all(x.opcode in ("dynamic-slice", "bitcast")
+                         for x in u):
+                total += sum(_shape_bytes(x.out_text) for x in u
+                             if x.opcode == "dynamic-slice")
+            else:
+                total += _shape_bytes(inst.out_text)
+        fusion_traffic_cache[comp_name] = total
+        return total
+
+    def walk(comp_name: str, mult: float, depth: int = 0):
+        c = comps.get(comp_name)
+        if c is None or mult == 0 or depth > 64:
+            return
+        for inst in c.instrs:
+            op = inst.opcode
+            if op == "dot":
+                tot.flops += mult * _dot_flops(inst, c.shapes)
+                tot.bytes_accessed += mult * (
+                    _shape_bytes(inst.out_text)
+                    + _operand_bytes(inst, c.shapes))
+            elif op == "convolution":
+                tot.flops += mult * _conv_flops(inst, c.shapes)
+                tot.bytes_accessed += mult * (
+                    _shape_bytes(inst.out_text)
+                    + _operand_bytes(inst, c.shapes))
+            elif op == "fusion":
+                mcall = re.search(r"calls=%?([\w.\-]+)", inst.attrs)
+                b = None
+                if mcall:
+                    tot.flops += mult * fusion_flops(mcall.group(1))
+                    b = fusion_traffic(mcall.group(1))
+                if b is None:
+                    b = (_shape_bytes(inst.out_text)
+                         + _operand_bytes(inst, c.shapes))
+                if inst.name.startswith("wrapped_convert") or (
+                        mcall and "convert_computation" in mcall.group(1)):
+                    tot.convert_bytes += mult * b
+                else:
+                    tot.bytes_accessed += mult * b
+            elif op == "while":
+                mc = re.search(r"condition=%?([\w.\-]+)", inst.attrs)
+                mb = re.search(r"body=%?([\w.\-]+)", inst.attrs)
+                trip = _while_trip_count(comps, mc.group(1)) if mc else 1
+                tot.trip_counts[f"{inst.name}@{comp_name}"] = trip
+                if mb:
+                    walk(mb.group(1), mult * trip, depth + 1)
+            elif op in ("call", "custom-call", "conditional"):
+                for mcall in re.finditer(
+                        r"(?:to_apply|calls|branch_computations)="
+                        r"(%?[\w.\-]+|\{[^}]*\})", inst.attrs):
+                    blob = mcall.group(1)
+                    for ref in re.findall(r"%?([\w.\-]+)", blob):
+                        if ref in comps:
+                            walk(ref, mult, depth + 1)
+                tot.bytes_accessed += mult * (
+                    _shape_bytes(inst.out_text)
+                    + _operand_bytes(inst, c.shapes))
+            else:
+                base = op[:-6] if op.endswith("-start") else op
+                if base in _COLL_OPS and not op.endswith("-done"):
+                    b = _operand_bytes(inst, c.shapes)
+                    tot.collective_bytes += mult * b
+                    tot.coll_by_op[base] += mult * b
+                    tot.coll_counts[base] += int(mult)
+                    tot.bytes_accessed += mult * (
+                        _shape_bytes(inst.out_text) + b)
+                elif op in _SKIP_BYTES_OPS or op.endswith("-done"):
+                    pass
+                elif op == "dynamic-slice":
+                    tot.bytes_accessed += mult * 2 * _shape_bytes(
+                        inst.out_text)
+                elif op == "dynamic-update-slice":
+                    refs = re.findall(r"%([\w.\-]+)", inst.operands_text)
+                    upd = c.shapes.get(refs[1], "") if len(refs) > 1 else \
+                        inst.out_text
+                    tot.bytes_accessed += mult * 2 * _shape_bytes(upd)
+                elif op == "convert":
+                    tot.convert_bytes += mult * (
+                        _shape_bytes(inst.out_text)
+                        + _operand_bytes(inst, c.shapes))
+                else:
+                    tot.bytes_accessed += mult * (
+                        _shape_bytes(inst.out_text)
+                        + _operand_bytes(inst, c.shapes))
+
+    walk("__entry__", 1.0)
+    return tot

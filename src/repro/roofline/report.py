@@ -1,0 +1,92 @@
+"""Render the dry-run artifacts into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.roofline.report artifacts/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    return f"{x:.3e}" if x else "0"
+
+
+def load(art_dir: str):
+    recs = []
+    for name in sorted(os.listdir(art_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(art_dir, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs, mesh: str):
+    rows = ["| arch | shape | kind | compile(s) | GiB/dev | mb | "
+            "coll GB/dev | collective mix |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("skipped") or r.get("error"):
+            continue
+        coll = r.get("collective", {})
+        mix = coll.get("by_op", {})
+        top = sorted(mix.items(), key=lambda kv: -kv[1])[:2]
+        mixs = " ".join(f"{k}:{v / 1e9:.2f}G" for k, v in top if v)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r.get('t_compile_s', '?')} "
+            f"| {r.get('memory', {}).get('per_device_total_gib', '?')} "
+            f"| {r.get('microbatches', '-')} "
+            f"| {coll.get('total', 0) / 1e9:.3f} | {mixs} |")
+    skipped = [r for r in recs if r.get("mesh") == mesh and r.get("skipped")]
+    for r in skipped:
+        rows.append(f"| {r['arch']} | {r['shape']} | — | skipped "
+                    f"(structural) | | | | |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh: str):
+    rows = ["| arch | shape | compute(s) | memory(s) | collective(s) | "
+            "dominant | useful-FLOP ratio | roofline |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("skipped") or r.get("error"):
+            continue
+        t = r.get("roofline", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t.get('compute_s', 0))} "
+            f"| {fmt_s(t.get('memory_s', 0))} "
+            f"| {fmt_s(t.get('collective_s', 0))} "
+            f"| {t.get('dominant', '?').replace('_s', '')} "
+            f"| {t.get('useful_flops_ratio', 0):.3f} "
+            f"| {t.get('roofline_frac', 0):.2%} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = [r for r in recs if not r.get("skipped") and not r.get("error")]
+    sk = [r for r in recs if r.get("skipped")]
+    er = [r for r in recs if r.get("error")]
+    doms = {}
+    for r in ok:
+        d = r.get("roofline", {}).get("dominant", "?")
+        doms[d] = doms.get(d, 0) + 1
+    return (f"{len(ok)} compiled, {len(sk)} skipped (structural), "
+            f"{len(er)} failed; dominant terms: {doms}")
+
+
+def main():
+    art_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    recs = load(art_dir)
+    print("## Summary\n")
+    print(summary(recs))
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n## Dry-run — mesh {mesh}\n")
+        print(dryrun_table(recs, mesh))
+        print(f"\n## Roofline — mesh {mesh}\n")
+        print(roofline_table(recs, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.runtime.ft import (  # noqa: F401
+    FailureInjector, StragglerWatchdog, run_with_recovery)

@@ -1,0 +1,42 @@
+"""Integration: one real dry-run cell compiles on the production meshes
+(512 fake host devices, subprocess) and produces coherent roofline
+artifacts.  The full 64-cell sweep runs via the CLI; this guards the
+machinery in CI time."""
+import json
+
+import pytest
+
+from conftest import run_with_devices
+
+
+@pytest.mark.parametrize("mp", [False, True], ids=["16x16", "2x16x16"])
+def test_dryrun_cell_compiles(mp):
+    out = run_with_devices(f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_cell
+r = run_cell("qwen1.5-0.5b", "train_4k", multi_pod={mp}, verbose=False)
+assert not r.get("error") and not r.get("skipped"), r
+assert r["flops"] > 0 and r["hlo_bytes"] > 0
+assert r["collective"]["total"] > 0
+assert r["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                     "collective_s")
+assert r["memory"]["per_device_total_gib"] < 16.0   # fits v5e HBM
+print("CELL_OK", json.dumps(r["roofline"]["dominant"]))
+""", n_devices=512, timeout=420)
+    assert "CELL_OK" in out
+
+
+def test_dryrun_skips_long_context_for_full_attention():
+    out = run_with_devices("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+r = run_cell("phi3-medium-14b", "long_500k", verbose=False)
+assert r["skipped"], r
+r2 = run_cell("rwkv6-3b", "long_500k", verbose=False)
+assert not r2.get("skipped") and not r2.get("error"), r2
+print("SKIP_RULES_OK")
+""", n_devices=512, timeout=420)
+    assert "SKIP_RULES_OK" in out

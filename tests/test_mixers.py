@@ -1,0 +1,183 @@
+"""Token-mixer math: flash vs naive attention, RWKV chunked vs scan
+(exactness), RG-LRU associative scan vs sequential, MoE capacity vs
+ragged, MLA decode vs prefill."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config, smoke_config
+from repro.models import rwkv
+from repro.models.attention import flash_attention
+from repro.models.griffin import rglru
+from repro.models.moe import _moe_local, moe_init
+
+
+# --------------------------------------------------------------------------
+# flash attention vs naive
+# --------------------------------------------------------------------------
+
+def naive_attention(q, k, v, causal, window=0, q_offset=0):
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s *= d ** -0.5
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None]
+    if window:
+        mask &= (qpos[:, None] - kpos[None]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, -1)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (5, 1)])
+def test_flash_vs_naive(causal, hq, hkv):
+    key = jax.random.PRNGKey(0)
+    b, sq, sk, d = 2, 75, 75, 16
+    q = jax.random.normal(key, (b, sq, hq, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, sk, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, sk, hkv, d))
+    out = flash_attention(q, k, v, causal=causal, q_block=32, kv_block=32)
+    ref = naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_sliding_window():
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 64, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 64, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 64, 2, 8))
+    out = flash_attention(q, k, v, causal=True, window=16,
+                          q_block=16, kv_block=16)
+    ref = naive_attention(q, k, v, True, window=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(3, 40), sk=st.integers(3, 40), seed=st.integers(0, 9))
+def test_flash_ragged_shapes(sq, sk, seed):
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, sq, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, sk, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, sk, 2, 8))
+    out = flash_attention(q, k, v, causal=False, q_block=16, kv_block=16)
+    ref = naive_attention(q, k, v, False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# RWKV-6: chunked evaluation is EXACT vs the token recurrence
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,chunk", [(13, 4), (32, 8), (17, 16), (16, 16)])
+def test_rwkv_chunked_exact(t, chunk):
+    b, h, kdim, vdim = 2, 3, 8, 8
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, t, h, kdim))
+    k = jax.random.normal(ks[1], (b, t, h, kdim))
+    v = jax.random.normal(ks[2], (b, t, h, vdim))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, kdim))) * 0.5 + 0.4
+    u = jax.random.normal(ks[4], (h, kdim)) * 0.1
+    s0 = jnp.zeros((b, h, kdim, vdim))
+    o1, s1 = rwkv.rwkv6_scan(r, k, v, w, u, s0)
+    o2, s2 = rwkv.rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv_state_carry_split():
+    """Evaluating [0:t1] then [t1:t] with carried state == full pass."""
+    b, t, h, kdim = 1, 24, 2, 8
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, t, h, kdim))
+    k = jax.random.normal(ks[1], (b, t, h, kdim))
+    v = jax.random.normal(ks[2], (b, t, h, kdim))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, kdim))) * 0.5 + 0.4
+    u = jax.random.normal(ks[4], (h, kdim)) * 0.1
+    s0 = jnp.zeros((b, h, kdim, kdim))
+    o_full, s_full = rwkv.rwkv6_chunked(r, k, v, w, u, s0, chunk=8)
+    t1 = 10
+    o1, s_mid = rwkv.rwkv6_chunked(r[:, :t1], k[:, :t1], v[:, :t1],
+                                   w[:, :t1], u, s0, chunk=8)
+    o2, s_end = rwkv.rwkv6_chunked(r[:, t1:], k[:, t1:], v[:, t1:],
+                                   w[:, t1:], u, s_mid, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_end), np.asarray(s_full),
+                               atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU: associative scan vs sequential reference
+# --------------------------------------------------------------------------
+
+def test_rglru_assoc_vs_sequential():
+    b, s, l = 2, 33, 16
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, l))
+    a_g = jax.random.normal(jax.random.PRNGKey(1), (b, s, l))
+    i_g = jax.random.normal(jax.random.PRNGKey(2), (b, s, l))
+    lam = jnp.linspace(0.1, 2.0, l)
+    h0 = jax.random.normal(jax.random.PRNGKey(3), (b, l))
+    h, h_last = rglru(x, a_g, i_g, lam, h0)
+    # sequential oracle
+    r = jax.nn.sigmoid(a_g)
+    ig = jax.nn.sigmoid(i_g)
+    log_a = -8.0 * jax.nn.softplus(lam)[None, None] * r
+    a = jnp.exp(log_a)
+    gated = x * ig * jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12))
+    hs = []
+    hc = h0
+    for t in range(s):
+        hc = a[:, t] * hc + gated[:, t]
+        hs.append(hc)
+    ref = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(ref[:, -1]),
+                               atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# MoE: capacity dispatch == ragged grouped GEMM when capacity is ample
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m",
+                                  "moonshot-v1-16b-a3b"])
+def test_moe_capacity_vs_ragged(arch):
+    cfg = smoke_config(get_config(arch))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y1, a1 = _moe_local(params, x, cfg, impl="capacity")
+    y2, a2 = _moe_local(params, x, cfg, impl="ragged")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=3e-5)
+    assert float(a1) == pytest.approx(float(a2))
+
+
+def test_moe_capacity_drops_overflow():
+    """With capacity_factor << 1 the output degrades but stays finite."""
+    cfg = smoke_config(get_config("granite-moe-1b-a400m"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    params = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y, _ = _moe_local(params, x, cfg, impl="capacity")
+    assert bool(jnp.all(jnp.isfinite(y)))

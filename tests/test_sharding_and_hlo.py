@@ -1,0 +1,163 @@
+"""Partition-rule invariants (every assigned axis divides the dim), the
+HLO analyzer calibration, topology schedules, and elastic resharding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config, list_archs
+from repro.core import topology
+from repro.models import model as M
+from repro.optim.sharding import param_specs
+from repro.roofline.hlo_parse import analyze
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16})]
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mesh", MESHES, ids=["sp", "mp"])
+def test_param_specs_divisibility(arch, mesh):
+    """INVARIANT: every sharded dim divides the product of its axes."""
+    cfg = get_config(arch)
+    params_abs = jax.eval_shape(
+        lambda k: M.init_params(k, cfg, max_seq=4096),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = param_specs(params_abs, cfg, mesh)
+    flat_p = jax.tree.leaves(params_abs)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "index"))
+    import jax.tree_util as jtu
+    specs_flat = jtu.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    )[0]
+    assert len(flat_p) == len(specs_flat)
+    n_sharded = 0
+    for leaf, spec in zip(flat_p, specs_flat):
+        for d, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            assert leaf.shape[d] % size == 0, (arch, leaf.shape, spec)
+            n_sharded += 1
+    # most parameters must actually be sharded (ZeRO/TP coverage)
+    assert n_sharded >= 0.5 * len(flat_p), (arch, n_sharded, len(flat_p))
+
+
+def test_embedding_is_vocab_sharded():
+    cfg = get_config("qwen2-0.5b")
+    params_abs = jax.eval_shape(
+        lambda k: M.init_params(k, cfg, max_seq=128),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = param_specs(params_abs, cfg, FakeMesh({"data": 16, "model": 16}))
+    assert specs["embed"][0] == "model"          # FD's sharded score axis
+
+
+# --------------------------------------------------------------------------
+# HLO analyzer calibration (the dry-run's measurement instrument)
+# --------------------------------------------------------------------------
+
+def test_hlo_plain_dot():
+    M_, N_, K_ = 128, 64, 32
+    x = jax.ShapeDtypeStruct((M_, K_), jnp.float32)
+    w = jax.ShapeDtypeStruct((K_, N_), jnp.float32)
+    t = analyze(jax.jit(lambda a, b: a @ b).lower(x, w).compile().as_text())
+    assert t.flops == 2 * M_ * N_ * K_
+
+
+def test_hlo_scan_trip_count():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    bs = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+
+    def scanned(a, bs):
+        def body(c, b):
+            return c @ b, ()
+        y, _ = jax.lax.scan(body, a, bs)
+        return y
+    t = analyze(jax.jit(scanned).lower(x, bs).compile().as_text())
+    assert t.flops == 6 * 2 * 64 ** 3
+    assert 6 in t.trip_counts.values()
+
+
+def test_hlo_nested_scan():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    bs = jax.ShapeDtypeStruct((4, 32, 32), jnp.float32)
+
+    def nested(a, bs):
+        def outer(c, b):
+            def inner(c2, _):
+                return c2 @ b, ()
+            c3, _ = jax.lax.scan(inner, c, jnp.arange(3))
+            return c3, ()
+        y, _ = jax.lax.scan(outer, a, bs)
+        return y
+    t = analyze(jax.jit(nested).lower(x, bs).compile().as_text())
+    assert t.flops == 12 * 2 * 32 ** 3
+
+
+# --------------------------------------------------------------------------
+# collective schedules (core/topology)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_halving_reaches_root(n):
+    """Every device's list must reach device 0 through the rounds."""
+    reached = {i: {i} for i in range(n)}
+    for perm, receivers in topology.halving_rounds(n):
+        for src, dst in perm:
+            reached[dst] |= reached[src]
+    assert reached[0] == set(range(n))
+    assert topology.schedule_transfers("halving", n) == n - 1   # Lemma 2
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_doubling_all_to_all(n):
+    reached = {i: {i} for i in range(n)}
+    for perm in topology.doubling_rounds(n):
+        new = {i: set(s) for i, s in reached.items()}
+        for src, dst in perm:
+            new[dst] |= reached[src]
+        reached = new
+    assert all(reached[i] == set(range(n)) for i in range(n))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_ring_covers(n):
+    reached = {i: {i} for i in range(n)}
+    relay = {i: {i} for i in range(n)}
+    for perm in topology.ring_rounds(n):
+        new_relay = {}
+        for src, dst in perm:
+            new_relay[dst] = relay[src]
+        relay = new_relay
+        for i in range(n):
+            reached[i] |= relay[i]
+    assert all(reached[i] == set(range(n)) for i in range(n))
+
+
+def test_schedule_bytes_model():
+    from repro.core.fd import comm_bytes
+    # FD moves O(k log n) or O(nk); CN moves O(n * shard)
+    assert comm_bytes("fd", 16, 9500, 20) < comm_bytes("cn_star", 16, 9500, 20)
+    assert comm_bytes("cn_star", 16, 9500, 20) < comm_bytes("cn", 16, 9500, 20)
+
+
+# --------------------------------------------------------------------------
+# elastic resharding
+# --------------------------------------------------------------------------
+
+def test_elastic_mesh_shrink():
+    from repro.ckpt.elastic import largest_pow2_leq, make_elastic_mesh
+    assert largest_pow2_leq(7) == 4
+    mesh = make_elastic_mesh(1, model_size=1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
