@@ -1,0 +1,191 @@
+"""Batched multi-query benchmark suite.
+
+Sweeps the batched engine over (n_peers, k, churn, algorithm) and the
+TPU-side collectives over (schedule, k), and measures the headline
+speedup of ``run_queries`` against a Python loop of ``run_query`` calls.
+
+  PYTHONPATH=src python -m benchmarks.multi_query [--fast] [--out PATH]
+
+writes ``BENCH_multi_query.json``:
+
+  {
+    "meta":    {"created_unix": float, "fast": bool, "jax": str,
+                "numpy": str},
+    "results": [
+      {"suite": "sim",   "n_peers": int, "k": int, "algorithm": str,
+       "lifetime_s": float|null, "n_queries": int, "n_trials": int,
+       "wall_s": float, "queries_per_s": float,
+       "mean_total_bytes": float, "mean_total_messages": float,
+       "mean_response_s": float, "mean_accuracy": float},
+      {"suite": "speedup", "n_peers": int, "n_queries": int,
+       "n_trials": int, "batch_s": float, "loop_s": float,
+       "speedup": float},
+      {"suite": "tpu", "schedule": str, "k": int, "n_dev": int,
+       "n_local": int, "model_bytes": int, "measured_bytes": int,
+       "wall_us_per_call": float}
+    ]
+  }
+
+The ``speedup`` suite is the acceptance measurement: 64 queries × 4
+trials on a 256-peer BA topology vs the same 256 queries run one
+``run_query`` call at a time (best-of-N both sides, to shrug off noisy
+CI neighbors).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.p2psim import SimParams, barabasi_albert, run_queries, run_query
+
+
+def sim_sweep(fast: bool = False):
+    results = []
+    sizes = (128, 256) if fast else (128, 256, 512)
+    ks = (20,) if fast else (10, 20)
+    lifetimes = (None,) if fast else (None, 60.0)
+    nq, nt = (16, 2) if fast else (32, 4)
+    for n_peers in sizes:
+        top = barabasi_albert(n_peers, m=2, seed=7)
+        origins = np.random.default_rng(0).integers(0, n_peers, nq)
+        for k in ks:
+            p = SimParams(seed=0, k=k)
+            for lt in lifetimes:
+                for alg in ("fd", "cn", "cn_star"):
+                    kw = {} if lt is None else {"lifetime_mean_s": lt}
+                    t0 = time.perf_counter()
+                    bm = run_queries(top, origins, p, nt, algorithm=alg,
+                                     **kw)
+                    wall = time.perf_counter() - t0
+                    results.append({
+                        "suite": "sim", "n_peers": n_peers, "k": k,
+                        "algorithm": alg, "lifetime_s": lt,
+                        "n_queries": nq, "n_trials": nt, "wall_s": wall,
+                        "queries_per_s": nq * nt / wall,
+                        "mean_total_bytes": float(bm.total_bytes.mean()),
+                        "mean_total_messages": float(
+                            bm.total_messages.mean()),
+                        "mean_response_s": float(
+                            bm.response_time_s.mean()),
+                        "mean_accuracy": float(bm.accuracy.mean()),
+                    })
+    return results
+
+
+def speedup_bench(fast: bool = False):
+    """The acceptance measurement: batched vs looped, best-of-N."""
+    n_peers, nq, nt = 256, 64, 4
+    top = barabasi_albert(n_peers, m=2, seed=7)
+    p = SimParams(seed=5)
+    origins = np.random.default_rng(0).integers(0, n_peers, nq)
+    run_queries(top, origins, p, nt)                  # warm numpy caches
+    reps_b, reps_l = (3, 1) if fast else (5, 2)
+    batch_s = min(_timed(lambda: run_queries(top, origins, p, nt))
+                  for _ in range(reps_b))
+    def loop():
+        for q in range(nq):
+            for t in range(nt):
+                run_query(top, int(origins[q]),
+                          dataclasses.replace(p, seed=p.seed + q * nt + t))
+    loop_s = min(_timed(loop) for _ in range(reps_l))
+    return [{"suite": "speedup", "n_peers": n_peers, "n_queries": nq,
+             "n_trials": nt, "batch_s": batch_s, "loop_s": loop_s,
+             "speedup": loop_s / batch_s}]
+
+
+def tpu_sweep(fast: bool = False):
+    import jax
+    from repro.core.fd import comm_bytes, fd_topk
+    from repro.core.topology import measure_comm_bytes
+    from repro.launch.mesh import make_host_mesh
+    results = []
+    mesh = make_host_mesh(model=len(jax.devices()))
+    n_dev_real = dict(mesh.shape)["model"]
+    n_model = 8                         # byte models at the deploy scale
+    n_local = 4096
+    ks = (20,) if fast else (8, 20)
+    for schedule in ("halving", "doubling", "ring"):
+        for k in ks:
+            fn = jax.jit(lambda s, k=k, schedule=schedule: fd_topk(
+                s, k, mesh, "model", schedule=schedule,
+                batch_axes=("data",)))
+            scores = jax.random.normal(jax.random.PRNGKey(0),
+                                       (8, n_dev_real * n_local))
+            fn(scores)[0].block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(10):
+                out = fn(scores)
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / 10 * 1e6
+            results.append({
+                "suite": "tpu", "schedule": schedule, "k": k,
+                "n_dev": n_model, "n_local": n_local,
+                "model_bytes": comm_bytes("fd", n_model, n_local, k,
+                                          schedule=schedule),
+                "measured_bytes": measure_comm_bytes(
+                    "fd", n_model, n_local, k, schedule=schedule),
+                "wall_us_per_call": us,
+            })
+    return results
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def collect(fast: bool = False) -> dict:
+    import jax
+    return {
+        "meta": {"created_unix": time.time(), "fast": fast,
+                 "jax": jax.__version__, "numpy": np.__version__},
+        "results": sim_sweep(fast) + speedup_bench(fast) + tpu_sweep(fast),
+    }
+
+
+def suite_rows():
+    """benchmarks.run contract: (name, value, derived) rows (fast mode)."""
+    data = collect(fast=True)
+    rows = []
+    for r in data["results"]:
+        if r["suite"] == "sim":
+            tag = (f"multi_query/sim/{r['algorithm']}/n={r['n_peers']}"
+                   f"/k={r['k']}")
+            rows.append((f"{tag}/qps", r["queries_per_s"],
+                         f"{r['n_queries']}x{r['n_trials']} batch"))
+            rows.append((f"{tag}/bytes", r["mean_total_bytes"],
+                         "mean per query"))
+        elif r["suite"] == "speedup":
+            rows.append(("multi_query/speedup_vs_loop", r["speedup"],
+                         "acceptance: >= 10x"))
+        else:
+            rows.append((f"multi_query/tpu/{r['schedule']}/k={r['k']}"
+                         "/bytes", r["model_bytes"],
+                         f"measured={r['measured_bytes']}"))
+    return rows
+
+
+ALL = {"multi_query": suite_rows}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: smaller sweeps, fewer reps")
+    ap.add_argument("--out", default="BENCH_multi_query.json")
+    args = ap.parse_args()
+    data = collect(fast=args.fast)
+    with open(args.out, "w") as f:
+        json.dump(data, f, indent=2)
+    sp = [r for r in data["results"] if r["suite"] == "speedup"][0]
+    print(f"wrote {args.out}: {len(data['results'])} results; "
+          f"speedup_vs_loop={sp['speedup']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,10 +12,12 @@ import time
 
 
 def main() -> None:
+    from benchmarks.multi_query import ALL as MULTI
     from benchmarks.paper_figures import ALL as FIGS
     from benchmarks.tpu_comm import ALL as COMM
     suites = dict(FIGS)
     suites.update(COMM)
+    suites.update(MULTI)
     want = sys.argv[1:] or list(suites)
     print("name,value,derived")
     for name in want:

@@ -14,8 +14,8 @@ import numpy as np
 from repro.optim.compress import (compress_init, compression_ratio,
                                   fd_sparse_allreduce, inflate_k)
 
-mesh = jax.make_mesh((8,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.jaxcompat import make_mesh
+mesh = make_mesh((8,), ("pod",))
 print(f"pods: {dict(mesh.shape)['pod']}")
 
 # a synthetic "gradient" with heavy-tailed structure (like real grads)

@@ -25,8 +25,8 @@ for alg in ("fd", "cn", "cn_star"):
 # ---- 2. FD as a mesh collective -----------------------------------------
 from repro.core.fd import comm_bytes, fd_topk
 
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.jaxcompat import make_mesh
+mesh = make_mesh((8,), ("model",))
 scores = jax.random.normal(jax.random.PRNGKey(0), (2, 65536))
 vals, idx = fd_topk(scores, 10, mesh, "model", schedule="halving")
 ref_vals, ref_idx = jax.lax.top_k(scores, 10)
@@ -43,7 +43,8 @@ from repro.runtime.steps import make_serve_step
 
 cfg = smoke_config(get_config("qwen2-0.5b"))
 hmesh = make_host_mesh(model=min(4, len(jax.devices())))
-ctx = jax.sharding.set_mesh(hmesh)
+from repro.jaxcompat import use_mesh
+ctx = use_mesh(hmesh)
 ctx.__enter__()
 params = M.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
 state = M.init_decode_state(cfg, batch=2, s_max=16, cache_dtype=jnp.float32)

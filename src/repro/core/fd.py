@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import jaxcompat
 from repro.core import topology
 from repro.core.scorelist import empty_scorelist
 from repro.kernels.merge import merge_scorelists
@@ -122,9 +123,10 @@ def fd_topk_gather_shard(local_scores: jax.Array, local_rows: jax.Array,
                          schedule: str = "halving") -> tuple:
     """Phases 2-4 over a sharded table: return the k winning *rows*.
 
-    local_scores: (n_local,), local_rows: (n_local, d).  Only k rows cross
+    local_scores: (..., n_local) — leading dims are a query batch over the
+    same table; local_rows: (n_local, d).  Only k rows per query cross
     the network (phase 4 = masked psum), vs CN's n_local * n rows.
-    Returns (vals (k,), idx (k,), rows (k, d)).
+    Returns (vals (..., k), idx (..., k), rows (..., k, d)).
     """
     n_local = local_scores.shape[-1]
     ax = jax.lax.axis_index(axis_name)
@@ -133,8 +135,8 @@ def fd_topk_gather_shard(local_scores: jax.Array, local_rows: jax.Array,
     # Phase 4: data retrieval — each winner row is contributed by its owner.
     owner = idx // n_local
     local_pos = jnp.clip(idx - ax * n_local, 0, n_local - 1)
-    rows = jnp.take(local_rows, local_pos, axis=0)          # (k, d)
-    mask = (owner == ax)[:, None].astype(local_rows.dtype)
+    rows = jnp.take(local_rows, local_pos, axis=0)          # (..., k, d)
+    mask = (owner == ax)[..., None].astype(local_rows.dtype)
     rows = jax.lax.psum(rows * mask, axis_name)
     return vals, idx, rows
 
@@ -142,6 +144,22 @@ def fd_topk_gather_shard(local_scores: jax.Array, local_rows: jax.Array,
 # --------------------------------------------------------------------------
 # Mesh-level wrappers
 # --------------------------------------------------------------------------
+
+def _batch_lead_spec(scores: jax.Array, mesh, batch_axes) -> list:
+    """Leading-dim spec entries for a batched query axis.
+
+    The first (batch) dim is sharded over the ``batch_axes`` present in
+    the mesh when its size divides their product; otherwise the batch is
+    replicated and only the score axis is sharded.
+    """
+    lead = [None] * (scores.ndim - 1)
+    if batch_axes and scores.ndim > 1:
+        present = tuple(a for a in batch_axes if a in mesh.axis_names)
+        if present and scores.shape[0] % math.prod(
+                dict(mesh.shape)[a] for a in present) == 0:
+            lead[0] = present
+    return lead
+
 
 def fd_topk(scores: jax.Array, k: int, mesh, axis: str = "model", *,
             schedule: str = "halving", algorithm: str = "fd",
@@ -157,13 +175,7 @@ def fd_topk(scores: jax.Array, k: int, mesh, axis: str = "model", *,
     axis_size = dict(mesh.shape)[axis]
     if n % axis_size:
         raise ValueError(f"score dim {n} not divisible by axis {axis_size}")
-    ndim = scores.ndim
-    lead = [None] * (ndim - 1)
-    if batch_axes and ndim > 1:
-        present = tuple(a for a in batch_axes if a in mesh.axis_names)
-        if present and scores.shape[0] % math.prod(
-                dict(mesh.shape)[a] for a in present) == 0:
-            lead[0] = present
+    lead = _batch_lead_spec(scores, mesh, batch_axes)
     in_spec = P(*(lead + [axis]))
     out_spec = P(*(lead + [None]))
 
@@ -177,23 +189,32 @@ def fd_topk(scores: jax.Array, k: int, mesh, axis: str = "model", *,
             return cn_star_topk_shard(local, k, axis, axis_size)
         raise ValueError(algorithm)
 
-    return jax.shard_map(fn, mesh=mesh, in_specs=(in_spec,),
-                         out_specs=(out_spec, out_spec),
-                         check_vma=False)(scores)
+    return jaxcompat.shard_map(fn, mesh=mesh, in_specs=(in_spec,),
+                               out_specs=(out_spec, out_spec))(scores)
 
 
 def fd_topk_gather(scores: jax.Array, rows: jax.Array, k: int, mesh,
-                   axis: str = "model", *, schedule: str = "halving") -> tuple:
-    """Top-k rows of a sharded (N, d) table by sharded (N,) scores."""
-    axis_size = mesh.shape[axis]
-    out = P(None)
-    return jax.shard_map(
+                   axis: str = "model", *, schedule: str = "halving",
+                   batch_axes=None) -> tuple:
+    """Top-k rows of a sharded (N, d) table by sharded scores.
+
+    scores: (..., N) — a leading batch of queries over the SAME table is
+    supported and, with ``batch_axes``, sharded over those mesh axes
+    (phase 4's masked psum then moves k rows per query per batch shard).
+    rows: (N, d), sharded over ``axis`` only.
+    Returns (vals (..., k), idx (..., k), rows (..., k, d)).
+    """
+    axis_size = dict(mesh.shape)[axis]
+    lead = _batch_lead_spec(scores, mesh, batch_axes)
+    in_spec = P(*(lead + [axis]))
+    out_spec = P(*(lead + [None]))
+    return jaxcompat.shard_map(
         functools.partial(fd_topk_gather_shard, k=k, axis_name=axis,
                           axis_size=axis_size, schedule=schedule),
         mesh=mesh,
-        in_specs=(P(axis), P(axis, None)),
-        out_specs=(out, out, P(None, None)),
-        check_vma=False)(scores, rows)
+        in_specs=(in_spec, P(axis, None)),
+        out_specs=(out_spec, out_spec, P(*(lead + [None, None]))))(
+            scores, rows)
 
 
 # --------------------------------------------------------------------------

@@ -79,3 +79,50 @@ def schedule_list_bytes(schedule: str, n: int, k: int,
 def allgather_bytes(n: int, shard_elems: int, elem_bytes: int) -> int:
     """Total bytes for a ring all-gather of per-device shards (CN/CN*)."""
     return n * (n - 1) * shard_elems * elem_bytes
+
+
+def measure_comm_bytes(algorithm: str, n_dev: int, n_local: int, k: int,
+                       schedule: str = "halving",
+                       elem_bytes: int = 4) -> int:
+    """Bytes measured by *walking* the actual round structure.
+
+    The closed forms in ``fd.comm_bytes`` / ``schedule_list_bytes`` are
+    models; this tallies every point-to-point transfer the schedules
+    actually emit — each ppermute pair moves one (score, index) k-list
+    (``ENTRY_BYTES`` per couple), the halving epilogue broadcasts the
+    originator's list to the other n-1 devices, and CN/CN* move their
+    payload with a ring all-gather (n-1 rounds, one shard per device per
+    round).  Tests assert this equals the closed-form model.
+    """
+    if algorithm == "cn":
+        return _measure_ring_allgather(n_dev, n_local, elem_bytes)
+    if algorithm == "cn_star":
+        return _measure_ring_allgather(n_dev, k, ENTRY_BYTES)
+    if algorithm != "fd":
+        raise ValueError(algorithm)
+    total = 0
+    list_bytes = k * ENTRY_BYTES
+    if schedule == "halving":
+        for perm, _receivers in halving_rounds(n_dev):
+            total += len(perm) * list_bytes
+        total += (n_dev - 1) * k * ENTRY_BYTES     # originator broadcast
+    elif schedule == "doubling":
+        for perm in doubling_rounds(n_dev):
+            total += len(perm) * list_bytes
+    elif schedule == "ring":
+        for perm in ring_rounds(n_dev):
+            total += len(perm) * list_bytes
+    else:
+        raise ValueError(schedule)
+    return total
+
+
+def _measure_ring_allgather(n: int, shard_elems: int,
+                            elem_bytes: int) -> int:
+    """Ring all-gather, round by round: every device forwards one shard
+    to its successor each of the n-1 rounds."""
+    total = 0
+    for _round in range(n - 1):
+        for _dev in range(n):
+            total += shard_elems * elem_bytes
+    return total

@@ -1,0 +1,115 @@
+"""Version-compat shims over JAX API drift (0.4.x ↔ ≥0.6).
+
+The repo is written against the modern surface — ``jax.shard_map``,
+``jax.sharding.AxisType`` / ``get_abstract_mesh`` / ``set_mesh`` — but
+must also run on 0.4.x jaxlibs where those names do not exist.  Every
+call site goes through this module instead of feature-testing inline.
+
+Mapping (new → old):
+  * ``jax.shard_map(..., axis_names=M, check_vma=False)``
+      → ``jax.experimental.shard_map.shard_map(..., check_rep=False,
+         auto=all_axes - M)``
+  * ``jax.make_mesh(..., axis_types=(Auto,)*r)``
+      → ``jax.make_mesh(...)`` (axis types predate 0.5; all axes are
+         implicitly auto)
+  * ``jax.sharding.set_mesh(mesh)`` → the mesh itself (old ``Mesh`` is
+      its own context manager and sets ``thread_resources``)
+  * ``jax.sharding.get_abstract_mesh()`` → the thread-resources
+      physical mesh; manual axes are detected via the bound axis env
+      (``axis_frame`` raises ``NameError`` outside shard_map).
+"""
+from __future__ import annotations
+
+import jax
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+
+
+def axis_type_auto():
+    """``AxisType.Auto`` where it exists, else None (all axes are auto)."""
+    return jax.sharding.AxisType.Auto if _HAS_AXIS_TYPE else None
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with every axis auto, on old and new JAX."""
+    kw = {} if devices is None else {"devices": devices}
+    if _HAS_AXIS_TYPE:
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` with replication checks off.
+
+    ``axis_names``: the MANUAL axes (None → all mesh axes manual), i.e.
+    the new-API meaning; mapped to old-API ``auto`` as the complement.
+    """
+    if _NEW_SHARD_MAP:
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = (frozenset() if axis_names is None
+            else frozenset(mesh.axis_names) - frozenset(axis_names))
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False, auto=auto)
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh                      # old JAX: Mesh is a context manager
+
+
+def current_mesh():
+    """The ambient (abstract) mesh, or None outside any mesh context."""
+    if _HAS_ABSTRACT_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or not m.axis_names:
+            return None
+        return m
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _axis_is_bound(name: str) -> bool:
+    """Old JAX: an axis bound in the axis env is manual (inside shard_map)."""
+    from jax._src import core as jcore
+    try:
+        jcore.axis_frame(name)
+        return True
+    except Exception:
+        return False
+
+
+def mesh_axis_names(auto_only: bool = False) -> tuple:
+    """Names of the ambient mesh axes; ``auto_only`` drops manual axes."""
+    m = current_mesh()
+    if m is None:
+        return ()
+    names = tuple(m.axis_names)
+    if not auto_only:
+        return names
+    if _HAS_AXIS_TYPE and hasattr(m, "axis_types"):
+        auto = jax.sharding.AxisType.Auto
+        return tuple(n for n, t in zip(names, m.axis_types) if t == auto)
+    return tuple(n for n in names if not _axis_is_bound(n))
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (≥0.7) / ``TPUCompilerParams`` (0.4–0.6)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def mesh_shape() -> dict:
+    """{axis: size} of the ambient mesh ({} when there is none)."""
+    m = current_mesh()
+    return {} if m is None else dict(m.shape)

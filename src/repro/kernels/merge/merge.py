@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import jaxcompat
+
 NEG_INF = float("-inf")
 
 
@@ -108,7 +110,7 @@ def merge_pallas(vals_a, idx_a, vals_b, idx_b, *, interpret: bool = True):
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
                    jax.ShapeDtypeStruct((b, k), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=jaxcompat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*args)

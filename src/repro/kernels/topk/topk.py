@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import jaxcompat
+
 NEG_INF = float("-inf")
 
 
@@ -125,7 +127,7 @@ def topk_pallas(scores: jax.Array, k: int, *, tile_n: int = 1024,
                    jax.ShapeDtypeStruct((b, k), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((1, k), jnp.float32),
                         pltpu.VMEM((1, k), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=jaxcompat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x)

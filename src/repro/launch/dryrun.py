@@ -27,6 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, get_config,
                                 list_archs, shape_applicable)
+from repro import jaxcompat
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.optim.adamw import AdamWConfig, adamw_init
@@ -121,7 +122,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     # the mesh context makes every with_sharding_constraint in the model
     # real during tracing (without it they are silent no-ops and SPMD
     # propagation is free to replicate activations)
-    mesh_ctx = jax.sharding.set_mesh(mesh)
+    mesh_ctx = jaxcompat.use_mesh(mesh)
     mesh_ctx.__enter__()
     if shape.kind == "train":
         microbatches = overrides.get(

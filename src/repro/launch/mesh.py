@@ -8,10 +8,15 @@ Axis semantics (DESIGN.md §6):
 
 A FUNCTION, not a module constant — importing this module never touches
 jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Mesh construction goes through ``repro.jaxcompat`` so the same code runs
+on 0.4.x jaxlibs (no ``axis_types``) and ≥0.6 (explicit auto axes).
 """
 from __future__ import annotations
 
 import jax
+
+from repro import jaxcompat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,9 +30,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"{need} devices required (have {len(devices)}); the dry-run "
             "sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before any jax import")
-    return jax.make_mesh(
-        shape, axes, devices=devices[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jaxcompat.make_mesh(shape, axes, devices=devices[:need])
 
 
 def make_host_mesh(model: int = 1):
@@ -38,6 +41,4 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     model = max(1, min(model, n))
     data = max(1, n // model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jaxcompat.make_mesh((data, model), ("data", "model"))

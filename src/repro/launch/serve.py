@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+from repro import jaxcompat
 from repro.configs.base import get_config, smoke_config
 from repro.data.pipeline import extra_model_inputs
 from repro.launch.mesh import make_host_mesh
@@ -124,7 +125,7 @@ def main():
     if args.smoke:
         cfg = smoke_config(cfg)
     mesh = make_host_mesh(model=args.model_par)
-    ctx = jax.sharding.set_mesh(mesh)
+    ctx = jaxcompat.use_mesh(mesh)
     ctx.__enter__()
     s_max = args.prompt_len + args.gen
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import jaxcompat
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs.base import get_config, smoke_config
 from repro.data.pipeline import SyntheticLM, device_put_batch, extra_model_inputs
@@ -37,7 +38,7 @@ def build(arch: str, *, smoke: bool, batch: int, seq: int, model_par: int,
     opt_cfg = AdamWConfig(lr=lr, total_steps=steps,
                           warmup_steps=max(steps // 20, 1))
 
-    ctx = jax.sharding.set_mesh(mesh)
+    ctx = jaxcompat.use_mesh(mesh)
     ctx.__enter__()
     key = jax.random.PRNGKey(0)
     params_abs = jax.eval_shape(

@@ -11,20 +11,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import jaxcompat
+
 # mesh axis-name conventions used everywhere
 BATCH_AXES = ("pod", "data")   # "pod" present only in the multi-pod mesh
 MODEL_AXIS = "model"
 
 
 def _mesh_axis_names(auto_only: bool = False):
-    m = jax.sharding.get_abstract_mesh()
-    if m is None:
-        return ()
-    names = tuple(m.axis_names)
-    if auto_only:
-        auto = jax.sharding.AxisType.Auto
-        names = tuple(n for n, t in zip(names, m.axis_types) if t == auto)
-    return names
+    return jaxcompat.mesh_axis_names(auto_only=auto_only)
 
 
 def constrain(x, *spec):
@@ -58,10 +53,8 @@ def batch_spec():
 
 def model_size() -> int:
     """Size of the model axis in the current (abstract) mesh, else 1."""
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or MODEL_AXIS not in m.axis_names:
-        return 1
-    return dict(m.shape)[MODEL_AXIS]
+    shape = jaxcompat.mesh_shape()
+    return shape.get(MODEL_AXIS, 1)
 
 
 def head_axis(n_heads: int):

@@ -63,8 +63,8 @@ def apply_moe(params, x, cfg):
     manual = tuple(a for a in BATCH_AXES if a in names)
     if manual:
         import math as _math
-        mesh = jax.sharding.get_abstract_mesh()
-        bsize = _math.prod(dict(mesh.shape)[a] for a in manual)
+        from repro import jaxcompat
+        bsize = _math.prod(jaxcompat.mesh_shape()[a] for a in manual)
         if x.shape[0] % bsize != 0:
             manual = ()
     if not manual:
@@ -85,9 +85,10 @@ def _moe_dispatch_outside(params, x, cfg, manual):
     """
     import math as _math
     from jax.sharding import PartitionSpec as P
+    from repro import jaxcompat
     e = cfg.moe
     b, s, d = x.shape
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = jaxcompat.current_mesh()
     bsize = _math.prod(dict(mesh.shape)[a] for a in manual)
     t_local = (b // bsize) * s
     k = e.top_k
@@ -121,11 +122,11 @@ def _moe_dispatch_outside(params, x, cfg, manual):
         return (buf.reshape(e.n_experts, cap, d), gate_vals,
                 slot_of_flat, jax.lax.pmean(aux, manual))
 
-    buf, gates, slot_of_flat, aux = jax.shard_map(
+    buf, gates, slot_of_flat, aux = jaxcompat.shard_map(
         dispatch, mesh=mesh,
         in_specs=(P(), P(manual, None, None)),
         out_specs=(P(None, manual, None), P(manual, None), P(manual), P()),
-        axis_names=set(manual), check_vma=False)(params["router"], x)
+        axis_names=set(manual))(params["router"], x)
 
     # ---- batched expert GEMMs under plain pjit, EXPERT-PARALLEL ---------
     # buf arrives model-replicated from the dispatch region; constraining
@@ -157,11 +158,11 @@ def _moe_dispatch_outside(params, x, cfg, manual):
         y = jnp.sum(y_tok * gates_l[..., None].astype(y_tok.dtype), axis=1)
         return y.reshape(tl // s, s, d)
 
-    y = jax.shard_map(
+    y = jaxcompat.shard_map(
         combine, mesh=mesh,
         in_specs=(P(None, manual, None), P(manual, None), P(manual)),
         out_specs=P(manual, None, None),
-        axis_names=set(manual), check_vma=False)(ye, gates, slot_of_flat)
+        axis_names=set(manual))(ye, gates, slot_of_flat)
 
     if e.n_shared_experts:
         sp = params["shared"]

@@ -26,6 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import jaxcompat
 from repro.kernels.topk import local_topk
 
 
@@ -110,9 +111,8 @@ def fd_sparse_allreduce(grads, ef_state: CompressState, mesh,
         fn = functools.partial(fd_sparse_allreduce_shard, k=k,
                                axis_name=axis, axis_size=axis_size)
         spec = P(*([None] * g.ndim))
-        return jax.shard_map(fn, mesh=mesh, in_specs=(spec, spec),
-                             out_specs=(spec, spec),
-                             check_vma=False)(g, ef)
+        return jaxcompat.shard_map(fn, mesh=mesh, in_specs=(spec, spec),
+                                   out_specs=(spec, spec))(g, ef)
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = treedef.flatten_up_to(ef_state.ef)

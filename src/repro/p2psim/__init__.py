@@ -1,4 +1,4 @@
 from repro.p2psim.graph import Topology, barabasi_albert, waxman  # noqa: F401
-from repro.p2psim.metrics import QueryMetrics  # noqa: F401
+from repro.p2psim.metrics import BatchMetrics, QueryMetrics  # noqa: F401
 from repro.p2psim.simulate import (  # noqa: F401
-    SimParams, run_query, run_statistics_heuristic)
+    SimParams, run_queries, run_query, run_statistics_heuristic)

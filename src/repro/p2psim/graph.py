@@ -128,6 +128,131 @@ def _components(adj: List[set]) -> np.ndarray:
     return comp
 
 
+def as_csr(top: Topology):
+    """(indptr (n+1,), indices (2E,)) int64 CSR view of the adjacency.
+
+    ``indices[indptr[u]:indptr[u+1]]`` are u's neighbors in sorted order —
+    identical iteration order to ``top.neighbors[u]``.
+    """
+    counts = np.array([len(a) for a in top.neighbors], dtype=np.int64)
+    indptr = np.zeros(top.n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    if indptr[-1]:
+        indices = np.concatenate(top.neighbors).astype(np.int64)
+    else:
+        indices = np.zeros(0, dtype=np.int64)
+    return indptr, indices
+
+
+def directed_edges(indptr: np.ndarray, indices: np.ndarray):
+    """(e_src, e_dst) for every directed edge, grouped by src ascending,
+    dst sorted within src — the exact order of the per-peer Python loops
+    the batched engine replaces."""
+    e_src = np.repeat(np.arange(len(indptr) - 1, dtype=np.int64),
+                      np.diff(indptr))
+    return e_src, indices
+
+
+def bfs_tree_csr(indptr: np.ndarray, indices: np.ndarray, origin: int,
+                 ttl: int):
+    """Vectorized-per-level BFS, bit-for-bit identical to ``bfs_tree``.
+
+    ``bfs_tree`` assigns ``parent[v]`` to the FIRST toucher — iterating
+    the frontier in discovery order and neighbors in sorted order.  The
+    same tie-break is reproduced here as the minimum position in the
+    concatenated frontier-neighbor gather, so every downstream quantity
+    (tree edges, wait times, merges) matches the scalar path exactly.
+    """
+    n = len(indptr) - 1
+    parent = -np.ones(n, dtype=np.int64)
+    depth = -np.ones(n, dtype=np.int64)
+    depth[origin] = 0
+    frontier = np.array([origin], dtype=np.int64)
+    # first-touch position scratch, allocated once; only the entries a
+    # level touches are reset afterwards
+    sentinel = np.iinfo(np.int64).max
+    first = np.full(n, sentinel, dtype=np.int64)
+    lvl = 0
+    while len(frontier) and lvl < ttl:
+        starts = indptr[frontier]
+        counts = indptr[frontier + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            break
+        # ragged gather of all frontier neighbor lists, in frontier order
+        offs = np.repeat(np.cumsum(counts) - counts, counts)
+        pos_in_row = np.arange(total, dtype=np.int64) - offs
+        cand = indices[np.repeat(starts, counts) + pos_in_row]
+        src = np.repeat(frontier, counts)
+        new = depth[cand] < 0
+        cand_new = cand[new]
+        if len(cand_new) == 0:
+            break
+        pos = np.flatnonzero(new)
+        np.minimum.at(first, cand_new, pos)
+        uniq = np.unique(cand_new)
+        order_new = uniq[np.argsort(first[uniq])]   # discovery order
+        parent[order_new] = src[first[order_new]]
+        depth[order_new] = lvl + 1
+        first[uniq] = sentinel
+        frontier = order_new
+        lvl += 1
+    return parent, depth, depth >= 0
+
+
+def bfs_tree_csr_multi(indptr: np.ndarray, indices: np.ndarray,
+                       origins: np.ndarray, ttl: int):
+    """``bfs_tree_csr`` for MANY origins in one sweep.
+
+    Returns (parent, depth, reached) each shaped (len(origins), n), row o
+    bit-for-bit equal to ``bfs_tree_csr(indptr, indices, origins[o],
+    ttl)``.  All origins advance level-synchronously; per-origin
+    first-touch tie-breaks are preserved because candidate positions are
+    only compared within the same (origin, node) key and the flattened
+    frontier keeps every origin's discovery order as a subsequence.
+    """
+    n = len(indptr) - 1
+    S = len(origins)
+    parent = -np.ones((S, n), dtype=np.int64)
+    depth = -np.ones((S, n), dtype=np.int64)
+    ar = np.arange(S)
+    depth[ar, origins] = 0
+    fr_org = ar.copy()
+    fr_node = np.asarray(origins, dtype=np.int64).copy()
+    # first-touch scratch allocated once (S*n); only touched keys reset
+    sentinel = np.iinfo(np.int64).max
+    first = np.full(S * n, sentinel, dtype=np.int64)
+    lvl = 0
+    while len(fr_node) and lvl < ttl:
+        starts = indptr[fr_node]
+        counts = indptr[fr_node + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            break
+        offs = np.repeat(np.cumsum(counts) - counts, counts)
+        pos_in_row = np.arange(total, dtype=np.int64) - offs
+        cand = indices[np.repeat(starts, counts) + pos_in_row]
+        src = np.repeat(fr_node, counts)
+        org = np.repeat(fr_org, counts)
+        new = depth[org, cand] < 0
+        cand_new = cand[new]
+        if len(cand_new) == 0:
+            break
+        pos = np.flatnonzero(new)
+        key = org[new] * n + cand_new
+        np.minimum.at(first, key, pos)
+        ukey = np.unique(key)
+        order_new = ukey[np.argsort(first[ukey])]   # global discovery order
+        uorg = order_new // n
+        unode = order_new % n
+        parent[uorg, unode] = src[first[order_new]]
+        depth[uorg, unode] = lvl + 1
+        first[ukey] = sentinel
+        fr_org, fr_node = uorg, unode
+        lvl += 1
+    return parent, depth, depth >= 0
+
+
 def bfs_tree(top: Topology, origin: int, ttl: int):
     """(parent, depth, reached): the implicit spanning tree of the flood.
 

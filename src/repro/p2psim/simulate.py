@@ -29,8 +29,10 @@ from typing import Optional
 
 import numpy as np
 
-from repro.p2psim.graph import Topology, bfs_tree
-from repro.p2psim.metrics import ENTRY_BYTES_PAPER, QUERY_BYTES, QueryMetrics
+from repro.p2psim.graph import (Topology, as_csr, bfs_tree, bfs_tree_csr,
+                                bfs_tree_csr_multi, directed_edges)
+from repro.p2psim.metrics import (ENTRY_BYTES_PAPER, QUERY_BYTES,
+                                  BatchMetrics, QueryMetrics)
 
 
 @dataclasses.dataclass
@@ -400,6 +402,621 @@ def _accuracy(scores, idx, delivered, k) -> float:
         return 0.0
     got = np.sort(scores[deliv_idx].reshape(-1))[::-1][:k]
     return float(np.intersect1d(top_true, got).size) / k
+
+
+# ==========================================================================
+# batched multi-query engine
+# ==========================================================================
+#
+# ``run_queries`` evaluates a (n_queries × n_trials) batch in one call.
+# Entry (q, t) is seeded ``params.seed + q * n_trials + t`` and reproduces
+# ``run_query`` on that seed BIT-FOR-BIT: the per-entry RNG streams draw
+# the same arrays in the same order, per-element float expressions are
+# identical, and every reduction that crosses elements is either integer,
+# a max, or a top-k selection over almost-surely-distinct values — all
+# order-independent — so replacing the per-peer Python loops with array
+# ops over (trials × peers × edges) changes nothing but the wall-clock.
+#
+# Work is split into three tiers:
+#   * per-topology   — CSR adjacency, directed edge arrays (once);
+#   * per-origin     — BFS tree, levels, children CSR, forward-phase
+#                      static edge masks (cached across trials);
+#   * per-trial      — RNG draws + vectorized wait/merge/churn sweeps,
+#                      batched over all trials of an origin at once.
+# Rare churn events (dead-parent reroute, urgent lists) fall back to
+# small per-event loops; top-k(top-k(A) ∪ B) == top-k(A ∪ B) makes the
+# post-hoc re-merge exact.
+
+
+def _draw_link_batch(rngs, p: SimParams, size):
+    pairs = [_draw_link(r, p, size) for r in rngs]
+    return (np.stack([a for a, _ in pairs]),
+            np.stack([b for _, b in pairs]))
+
+
+def _local_topk_scores_batch(n_tuples: np.ndarray, u: np.ndarray,
+                             k: int) -> np.ndarray:
+    """Batched ``local_topk_scores`` with pre-drawn uniforms u (T, n, k).
+
+    Same per-element expressions as the scalar version — bit-for-bit."""
+    T, n = n_tuples.shape
+    out = np.empty((T, n, k))
+    cur = np.ones((T, n))
+    remaining = n_tuples.astype(np.float64)
+    for j in range(k):
+        cur = cur * u[:, :, j] ** (1.0 / np.maximum(remaining, 1.0))
+        out[:, :, j] = cur
+        remaining -= 1.0
+    return out
+
+
+def _local_topk_scores_batch_fast(n_tuples: np.ndarray, u: np.ndarray,
+                                  k: int) -> np.ndarray:
+    """Log-space form of the same order statistics: exp(Σ log(u_i)/rem_i).
+
+    ~3× cheaper than the k pow passes; identical distribution but
+    last-ulp different values — only used when entry-wise bit-parity
+    with ``run_query`` is not required (shared-stream, E > 1)."""
+    rem = np.maximum(n_tuples[..., None].astype(np.float64)
+                     - np.arange(k), 1.0)
+    out = np.log(u, out=u)                       # clobbers u (not reused)
+    out /= rem
+    np.cumsum(out, axis=2, out=out)
+    return np.exp(out, out=out)
+
+
+class _OriginStatic:
+    """Trial-independent per-origin state (shared by all trials)."""
+
+    def __init__(self, top: Topology, indptr, indices, e_src, e_dst,
+                 edge_keys, degrees, origin: int, params: SimParams,
+                 fw_strategy: str, bfs=None):
+        n = top.n
+        if bfs is not None:           # precomputed by the multi-origin BFS
+            parent, depth, reached = bfs
+            self.ttl = (int(depth.max()) if params.ttl == 0
+                        else params.ttl)
+        elif params.ttl == 0:
+            # auto TTL = eccentricity: the full-depth BFS *is* the
+            # TTL-limited BFS at that TTL, so reuse it
+            parent, depth, reached = bfs_tree_csr(indptr, indices, origin, n)
+            self.ttl = int(depth.max())
+        else:
+            self.ttl = params.ttl
+            parent, depth, reached = bfs_tree_csr(indptr, indices, origin,
+                                                  self.ttl)
+        self.parent, self.depth, self.reached = parent, depth, reached
+        self.origin = origin
+        self.idx = np.flatnonzero(reached)
+        self.ttl_rem = np.maximum(self.ttl - depth, 0)
+        dmax = int(depth.max())
+        self.levels = [np.flatnonzero(depth == d) for d in range(dmax + 1)]
+        # children CSR: grouped by parent, ascending within each parent —
+        # the order run_query builds its per-node lists in
+        childs = self.idx[parent[self.idx] >= 0]
+        par = parent[childs]
+        ordk = np.argsort(par, kind="stable")
+        self.kid_sorted = childs[ordk]
+        self.kid_ptr = np.searchsorted(par[ordk], np.arange(n + 1))
+        self.n_edges_pq = int(((e_src < e_dst) & reached[e_src]
+                               & reached[e_dst]).sum())
+        self.avg_degree = float(np.mean(degrees[self.idx]))
+
+        # ---- forward-phase static masks --------------------------------
+        mask_u = reached & (self.ttl_rem > 0)
+        self.m_basic = int(degrees[mask_u].sum() - mask_u.sum()
+                           + int(mask_u[origin]))
+        self.fw_strategy = fw_strategy
+        if fw_strategy == "basic":
+            return
+        pu_e = parent[e_src]
+        active = reached[e_src] & (self.ttl_rem[e_src] > 0) & (e_dst != pu_e)
+        unreach = active & ~reached[e_dst]
+        rest = active & reached[e_dst]
+        if fw_strategy == "st1+2" and len(edge_keys):
+            # Strategy 2 skip: v already reached by parent(u)'s send —
+            # membership test (parent(u), v) ∈ E via the sorted key array
+            m2 = rest & (pu_e >= 0)
+            key = pu_e * n + e_dst
+            pos = np.minimum(np.searchsorted(edge_keys, key[m2]),
+                             len(edge_keys) - 1)
+            member = np.zeros(len(e_src), bool)
+            member[m2] = edge_keys[pos] == key[m2]
+            rest = rest & ~member
+        tree = rest & (parent[e_dst] == e_src)
+        self.fw_static = int(unreach.sum() + tree.sum())
+        els = np.flatnonzero(rest & ~tree)
+        self.fw_els_src = e_src[els]
+        self.fw_els_dst = e_dst[els]
+        self.fw_cond = ((parent[self.fw_els_src] == self.fw_els_dst)
+                        | (depth[self.fw_els_dst]
+                           <= depth[self.fw_els_src]))
+
+
+def _topk_remerge(mvals_row, mown_row, extra_v, extra_o, k):
+    """Exact: top-k(top-k(A) ∪ B) == top-k(A ∪ B) for distinct values."""
+    allm = np.concatenate([mvals_row] + extra_v)
+    allo = np.concatenate([mown_row] + extra_o)
+    sel = np.argsort(allm)[::-1][:k]
+    return allm[sel], allo[sel]
+
+
+def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
+                 seeds, n: int, p: SimParams, algorithm: str,
+                 dynamic: bool, lifetime_mean_s: float,
+                 independent: bool) -> dict:
+    """Every (query, trial) entry at once — the flattened batch axis E.
+
+    ``sts``: unique ``_OriginStatic`` list; ``ent_st[e]`` indexes into it.
+    All sweeps run over (E × peers/edges) arrays and the merge walks tree
+    levels ONCE globally, bucketing nodes by child count so every bucket
+    is a dense (rows × children × k) tensor op.  Returns (E,) metric
+    arrays.
+
+    ``independent=True``: entry e draws from its own Generator seeded
+    ``seeds[e]`` in run_query's exact call order — bit-for-bit entry-wise
+    parity with ``run_query``.  ``independent=False``: one shared stream
+    seeded ``seeds[0]`` issues batch-shaped draws; for E == 1 that stream
+    is run_query's exactly (array shape (1, n) consumes the generator
+    identically to (n,)), so a batch of one is still bit-for-bit equal;
+    for E > 1 the entries are i.i.d. but not entry-wise reproducible, and
+    draws whose *values* are unused (FD never reads item sizes) are
+    skipped for speed.
+    """
+    E = len(seeds)
+    S = len(sts)
+    k = p.k
+    list_bytes = k * ENTRY_BYTES_PAPER
+    ent_of_st = [np.flatnonzero(ent_st == s) for s in range(S)]
+
+    # ---- RNG draws, run_query's exact order -----------------------------
+    if independent:
+        rngs = [np.random.default_rng(s) for s in seeds]
+        n_tuples = np.stack([r.integers(p.tuples_lo, p.tuples_hi + 1, n)
+                             for r in rngs])
+        u = np.stack([r.random((n, k)) for r in rngs])
+    else:
+        g = np.random.default_rng(int(seeds[0]))
+        rngs = [g] * E
+        n_tuples = g.integers(p.tuples_lo, p.tuples_hi + 1, (E, n))
+        u = g.random((E, n, k))
+    exact = independent or E == 1
+    scores = (_local_topk_scores_batch(n_tuples, u, k) if exact
+              else _local_topk_scores_batch_fast(n_tuples, u, k))
+    t_exec = n_tuples * p.exec_s_per_tuple
+    if independent:
+        lat_up, bw_up = _draw_link_batch(rngs, p, n)
+        lat_dn, bw_dn = _draw_link_batch(rngs, p, n)
+    else:
+        lat_up, bw_up = _draw_link(g, p, (E, n))
+        lat_dn, bw_dn = _draw_link(g, p, (E, n))
+
+    # ---- level row sets: (entry, node, parent, kid-slice) per depth -----
+    kid_concat = (np.concatenate([st.kid_sorted for st in sts])
+                  if any(len(st.kid_sorted) for st in sts)
+                  else np.zeros(0, np.int64))
+    off = 0
+    ksg = []
+    for st in sts:
+        ksg.append(st.kid_ptr + off)
+        off += len(st.kid_sorted)
+    dmax = max(len(st.levels) for st in sts) - 1
+    # per st: entry-expanded arrays over all reached nodes, NODE-MAJOR and
+    # ordered by depth — each level is then a contiguous slice, so the
+    # per-level row set is one concatenate per array instead of per-st
+    # repeat/tile calls inside the level loop
+    st_rows = []
+    for s, st in enumerate(sts):
+        es = ent_of_st[s]
+        nE = len(es)
+        vs_all = np.concatenate(st.levels)
+        bounds = np.cumsum([0] + [len(lv) for lv in st.levels]) * nE
+        vv_st = np.repeat(vs_all, nE)
+        ee_st = np.tile(es, len(vs_all))
+        pp_st = np.repeat(st.parent[vs_all], nE)
+        ks_st = np.repeat(ksg[s][vs_all], nE)
+        cnt_st = np.repeat(st.kid_ptr[vs_all + 1] - st.kid_ptr[vs_all], nE)
+        st_rows.append((bounds, ee_st, vv_st, pp_st, ks_st, cnt_st))
+    rows = []                                # rows[d] = (ee, vv, pp, ks, cnt)
+    for d in range(dmax + 1):
+        parts = [[], [], [], [], []]
+        for s, st in enumerate(sts):
+            if d >= len(st.levels):
+                continue
+            bounds = st_rows[s][0]
+            lo, hi = bounds[d], bounds[d + 1]
+            if lo == hi:
+                continue
+            for i in range(5):
+                parts[i].append(st_rows[s][i + 1][lo:hi])
+        rows.append(tuple(
+            np.concatenate(a) if a else np.zeros(0, np.int64)
+            for a in parts))
+
+    # ---- query arrival down the tree ------------------------------------
+    t_q = np.full((E, n), np.inf)
+    t_q[np.arange(E), ent_origin] = 0.0
+    dn_term = lat_dn + QUERY_BYTES / bw_dn       # same float grouping as
+    for d in range(1, dmax + 1):                 # _link_time per element
+        ee, vv, pp, _, _ = rows[d]
+        if len(ee) == 0:
+            continue
+        t_q[ee, vv] = t_q[ee, pp] + dn_term[ee, vv]
+    t_ex_done = t_q + t_exec
+
+    # ---- churn ----------------------------------------------------------
+    if math.isinf(lifetime_mean_s):
+        death = np.full((E, n), np.inf)
+    else:
+        if independent:
+            death = np.stack([r.exponential(lifetime_mean_s, n)
+                              for r in rngs])
+        else:
+            death = g.exponential(lifetime_mean_s, (E, n))
+        death[np.arange(E), ent_origin] = np.inf
+
+    # FD never reads the item-size values — only their stream position
+    # matters, and only for entry-wise parity (independent / E == 1)
+    need_items = algorithm != "fd" or exact
+    if need_items:
+        if independent:
+            item_sizes = np.stack([np.maximum(
+                r.normal(p.item_mean_B, p.item_std_B, (n, k)), 64.0)
+                for r in rngs])
+        else:
+            item_sizes = np.maximum(
+                g.normal(p.item_mean_B, p.item_std_B, (E, n, k)), 64.0)
+
+    out = {f: np.zeros(E, np.int64)
+           for f in ("m_fw", "m_bw", "m_rt", "b_bw", "b_rt")}
+    out["response_time_s"] = np.zeros(E)
+    out["accuracy"] = np.zeros(E)
+    m_basic_arr = np.array([st.m_basic for st in sts], np.int64)
+
+    # ---- CN / CN* baselines --------------------------------------------
+    if algorithm in ("cn", "cn_star"):
+        if independent:
+            lat_o, bw_o = _draw_link_batch(rngs, p, n)
+        else:
+            lat_o, bw_o = _draw_link(g, p, (E, n))
+        out["m_fw"][:] = m_basic_arr[ent_st]
+        for e in range(E):
+            idx = sts[ent_st[e]].idx
+            origin = int(ent_origin[e])
+            per_peer = (item_sizes[e][:, :k].sum(1) if algorithm == "cn"
+                        else np.full(n, float(list_bytes)))
+            alive = death[e] > t_ex_done[e]
+            senders = idx[alive[idx]]
+            senders = senders[senders != origin]
+            out["m_bw"][e] = len(senders)
+            out["b_bw"][e] = int(per_peer[senders].sum())
+            own_bw = max(p.bw_mean_Bps, 1.0)
+            t_arrive = t_ex_done[e][senders] + lat_o[e][senders]
+            t_resp = (np.max(t_arrive) if len(senders) else 0.0) \
+                + per_peer[senders].sum() / own_bw
+            if algorithm == "cn_star":
+                true_full = np.full((n, k), -np.inf)
+                true_full[idx] = scores[e][idx]
+                flat = true_full.reshape(-1)
+                top_idx = np.argpartition(flat, -k)[-k:]
+                owners = np.unique(top_idx // k)
+                out["m_rt"][e] = 2 * len(owners)
+                out["b_rt"][e] = int(
+                    out["m_rt"][e] / 2 * p.request_B
+                    + item_sizes[e].reshape(-1)[top_idx].sum())
+                t_resp += 2 * p.latency_mean_s + out["b_rt"][e] / own_bw
+            out["response_time_s"][e] = float(t_resp)
+            delivered = np.zeros(n, bool)
+            delivered[senders] = True
+            delivered[origin] = True
+            out["accuracy"][e] = _accuracy(scores[e], idx, delivered, k)
+        return out
+
+    # ---- FD: forward phase ----------------------------------------------
+    if sts[0].fw_strategy == "basic":
+        out["m_fw"][:] = m_basic_arr[ent_st]
+    else:
+        if independent:
+            lam = np.stack([r.random(n) for r in rngs]) * p.lam_max_s
+        else:
+            lam = g.random((E, n)) * p.lam_max_s
+        tqf = np.stack([np.where(st.depth >= 0, st.depth * p.t_qsnd_s,
+                                 np.inf) for st in sts])
+        send_at = tqf[ent_st] + lam                          # (E, n)
+        for s, st in enumerate(sts):
+            es = ent_of_st[s]
+            if len(st.fw_els_src) == 0:
+                out["m_fw"][es] = st.fw_static
+                continue
+            slt = (send_at[np.ix_(es, st.fw_els_dst)]
+                   < send_at[np.ix_(es, st.fw_els_src)])
+            skip = (slt & st.fw_cond[None, :]).sum(axis=1)
+            out["m_fw"][es] = st.fw_static + len(st.fw_els_src) - skip
+
+    # ---- FD: merge-and-backward, deepest level first --------------------
+    wt = np.stack([wait_time(st.ttl_rem, p) for st in sts])  # (S, n)
+    deadline = t_q + wt[ent_st]
+    send_t = np.zeros((E, n))
+    valid = np.zeros((E, n), bool)
+    # only reached nodes are ever read, and each is written at its level
+    # before any reader (parent / origin gather) — no init needed
+    mvals = np.empty((E, n, k))
+    mown = np.empty((E, n, k), np.int32)
+    urgent: list = [[] for _ in range(E)]      # per entry: (eta, peer)
+    m_bw = out["m_bw"]
+    b_bw = out["b_bw"]
+    up_term = lat_up + list_bytes / bw_up      # arrival link time per node
+    no_churn = math.isinf(lifetime_mean_s)
+    if no_churn:
+        # every reached non-origin peer is alive and sends exactly once;
+        # urgent hops are added as they are discovered below
+        n_reached_arr = np.array([len(st.idx) for st in sts], np.int64)
+        m_bw += n_reached_arr[ent_st] - 1
+        b_bw += (n_reached_arr[ent_st] - 1) * list_bytes
+
+    for d in range(dmax, -1, -1):
+        ee, vv, _, ks_row, cnt_row = rows[d]
+        if len(ee) == 0:
+            continue
+        reroute = []
+        # bucket rows by child count: each bucket is a dense
+        # (rows × children) block — no padding waste, no slot loop
+        ucnt, inv = np.unique(cnt_row, return_inverse=True)
+        for bi, c in enumerate(ucnt):
+            sel = np.flatnonzero(inv == bi)
+            eeb, vvb = ee[sel], vv[sel]
+            own_b = t_ex_done[eeb, vvb]
+            c = int(c)
+            if c:
+                C = kid_concat[ks_row[sel][:, None]
+                               + np.arange(c)[None, :]]     # (R, c)
+                eb = eeb[:, None]
+                a = send_t[eb, C] + up_term[eb, C]
+                all_in = a.max(axis=1)
+            else:
+                all_in = np.zeros(len(sel))
+            s_b = np.minimum(np.maximum(own_b, all_in),
+                             np.maximum(deadline[eeb, vvb], own_b))
+            if no_churn:              # everyone alive: straight commits,
+                alive_b = None        # no masks, no valid[] bookkeeping
+                send_t[eeb, vvb] = s_b
+            else:
+                alive_b = death[eeb, vvb] >= s_b
+                send_t[eeb, vvb] = np.where(alive_b, s_b, np.inf)
+                valid[eeb, vvb] = alive_b
+
+            if c:
+                R = len(sel)
+                if no_churn:
+                    ont = a <= s_b[:, None]
+                    all_ontime = bool(ont.all())
+                else:
+                    kid_v = valid[eb, C]
+                    ont = kid_v & (a <= s_b[:, None]) & alive_b[:, None]
+                    all_ontime = False
+                contrib_v = np.empty((R, c + 1, k))
+                contrib_v[:, 0, :] = scores[eeb, vvb]
+                contrib_v[:, 1:, :] = mvals[eb, C]
+                if not all_ontime:
+                    contrib_v[:, 1:, :][~ont] = -np.inf
+                contrib_o = np.empty((R, c + 1, k), np.int32)
+                contrib_o[:, 0, :] = vvb[:, None]
+                contrib_o[:, 1:, :] = mown[eb, C]
+                fv = contrib_v.reshape(R, -1)
+                fo = contrib_o.reshape(R, -1)
+                if c <= 3:            # small width: one argsort beats
+                    selk = np.argsort(fv, axis=1)[:, :-(k + 1):-1]
+                else:                 # partition+sort
+                    part = np.argpartition(fv, -k, axis=1)[:, -k:]
+                    pvv = np.take_along_axis(fv, part, axis=1)
+                    selk = np.take_along_axis(
+                        part, np.argsort(pvv, axis=1)[:, ::-1], axis=1)
+                newv = np.take_along_axis(fv, selk, axis=1)
+                newo = np.take_along_axis(fo, selk, axis=1)
+            else:
+                all_ontime = True
+                newv = scores[eeb, vvb]
+                newo = np.repeat(vvb[:, None], k, axis=1).astype(np.int32)
+            if no_churn:
+                mvals[eeb, vvb] = newv
+                mown[eeb, vvb] = newo
+            else:
+                mvals[eeb, vvb] = np.where(alive_b[:, None], newv, -np.inf)
+                mown[eeb, vvb] = np.where(alive_b[:, None], newo, -1)
+                sends_b = alive_b & (vvb != ent_origin[eeb])
+                cnt_send = np.bincount(eeb[sends_b], minlength=E)
+                m_bw += cnt_send
+                b_bw += cnt_send * list_bytes
+
+            if dynamic and c and not all_ontime:
+                late = ~ont if no_churn else (
+                    kid_v & (a > s_b[:, None]) & alive_b[:, None])
+                ri, ci = np.nonzero(late)
+                if len(ri):
+                    etas = a[ri, ci] + d * (p.latency_mean_s
+                                            + list_bytes / p.bw_mean_Bps)
+                    for r_, c_, eta in zip(ri, C[ri, ci], etas):
+                        urgent[int(eeb[r_])].append((eta, int(c_)))
+                    late_cnt = np.bincount(eeb[ri], minlength=E)
+                    m_bw += late_cnt * d
+                    b_bw += late_cnt * (d * list_bytes)
+                if not no_churn:
+                    deadk = (~kid_v) & alive_b[:, None]
+                    ri, ci = np.nonzero(deadk)
+                    for r_, c_ in zip(ri, C[ri, ci]):
+                        reroute.append((int(eeb[r_]), int(vvb[r_]),
+                                        int(c_)))
+
+        # dead-parent reroute (§4.2): grandchildren lists join v directly
+        for e_, v_, c_ in reroute:
+            s_ = ent_st[e_]
+            ev, eo = [], []
+            for cc in kid_concat[ksg[s_][c_]:ksg[s_][c_ + 1]]:
+                if valid[e_, cc] and send_t[e_, cc] < np.inf:
+                    ev.append(mvals[e_, cc])
+                    eo.append(mown[e_, cc])
+                    m_bw[e_] += 1
+                    b_bw[e_] += list_bytes
+            if ev:
+                mvals[e_, v_], mown[e_, v_] = _topk_remerge(
+                    mvals[e_, v_], mown[e_, v_], ev, eo, k)
+
+    # ---- true top-k of each reach set, grouped by origin ----------------
+    top_true_all = np.empty((E, k))
+    for s, st in enumerate(sts):
+        es = ent_of_st[s]
+        block = scores[np.ix_(es, st.idx)].reshape(len(es), -1)
+        part = np.partition(block, -k, axis=1)[:, -k:]
+        top_true_all[es] = np.sort(part, axis=1)[:, ::-1]
+
+    # ---- origin: accept urgent lists ------------------------------------
+    t_merge_done = send_t[np.arange(E), ent_origin] + p.merge_s
+    for e in range(E):
+        if not urgent[e]:
+            continue
+        origin = int(ent_origin[e])
+        ok = [c for (eta, c) in urgent[e]
+              if eta <= t_merge_done[e] and (no_churn or valid[e, c])]
+        if ok and (no_churn or valid[e, origin]):
+            mvals[e, origin], mown[e, origin] = _topk_remerge(
+                mvals[e, origin], mown[e, origin],
+                [mvals[e, c] for c in ok], [mown[e, c] for c in ok], k)
+
+    # ---- data retrieval + accuracy --------------------------------------
+    if exact:
+        # run_query's per-entry code, verbatim (bit-for-bit parity)
+        for e in range(E):
+            origin = int(ent_origin[e])
+            final_owners = np.unique(mown[e, origin])
+            alive_own = death[e, final_owners] > t_merge_done[e]
+            out["m_rt"][e] = 2 * int(alive_own.sum())
+            lat_o, bw_o = _draw_link(rngs[e], p, len(final_owners))
+            per_owner_counts = np.array(
+                [(mown[e, origin] == o).sum() for o in final_owners])
+            fetch_bytes = per_owner_counts * p.item_mean_B
+            out["b_rt"][e] = int(out["m_rt"][e] / 2 * p.request_B
+                                 + fetch_bytes[alive_own].sum())
+            t_fetch = (2 * lat_o + (p.request_B + fetch_bytes) / bw_o)
+            t_fetch = t_fetch[alive_own]
+            out["response_time_s"][e] = float(
+                t_merge_done[e] + (t_fetch.max() if len(t_fetch) else 0.0))
+
+            got = mvals[e, origin]              # sorted descending
+            inter = np.intersect1d(top_true_all[e], got).size
+            dead_owned = np.isin(mown[e, origin], final_owners[~alive_own])
+            inter = max(0, inter - int(np.isin(
+                mvals[e, origin][dead_owned], top_true_all[e]).sum()))
+            out["accuracy"][e] = inter / k
+        return out
+
+    # shared-stream fast path: the same retrieval model, vectorized over
+    # all entries at once (draw assignment to owners differs but is
+    # i.i.d. — distributionally identical to the scalar path)
+    ar = np.arange(E)
+    mo = mown[ar, ent_origin]                                # (E, k)
+    gv = mvals[ar, ent_origin]                               # (E, k)
+    dth = death[ar[:, None], mo]                             # (E, k)
+    alive_elem = dth > t_merge_done[:, None]
+    eqm = mo[:, :, None] == mo[:, None, :]                   # (E, k, k)
+    count_elem = eqm.sum(axis=2)                 # owner multiplicity
+    firstocc = ~(eqm & np.tri(k, k, -1, dtype=bool)[None]).any(axis=2)
+    alive_owner_cnt = (firstocc & alive_elem).sum(axis=1)
+    out["m_rt"][:] = 2 * alive_owner_cnt
+    # Σ_over-alive-owners count_o · item_mean == #elements with a live
+    # owner · item_mean (exact: every term is an integer multiple)
+    fetch_total = alive_elem.sum(axis=1) * p.item_mean_B
+    out["b_rt"][:] = (alive_owner_cnt * p.request_B
+                      + fetch_total).astype(np.int64)
+    lat_o, bw_o = _draw_link(g, p, (E, k))       # one draw per owner slot
+    t_f = 2 * lat_o + (p.request_B + count_elem * p.item_mean_B) / bw_o
+    t_max = np.where(firstocc & alive_elem, t_f, -np.inf).max(axis=1)
+    out["response_time_s"][:] = t_merge_done + np.where(
+        np.isfinite(t_max), t_max, 0.0)
+
+    match = (gv[:, :, None] == top_true_all[:, None, :]).any(axis=2)
+    inter = match.sum(axis=1)
+    corr = (match & ~alive_elem).sum(axis=1)
+    out["accuracy"][:] = np.maximum(0, inter - corr) / k
+    return out
+
+
+def run_queries(top: Topology, origins, params: SimParams = SimParams(),
+                n_trials: int = 1, *, algorithm: str = "fd",
+                strategy: str = "st1+2", dynamic: bool = True,
+                lifetime_mean_s: float = float("inf"),
+                seeds=None, independent_streams: bool = False
+                ) -> BatchMetrics:
+    """Batched multi-query simulation: (len(origins) × n_trials) queries
+    in one call, replacing a Python loop of ``run_query`` calls.
+
+    BFS trees and forward-phase edge masks are computed once per distinct
+    origin and shared by its trials; all trial-varying work is flattened
+    over the (queries × trials) entry axis and swept with array ops —
+    thousands of concurrent queries per call.
+
+    RNG modes:
+      * default (shared stream) — one generator seeded ``params.seed``
+        issues batch-shaped draws.  A batch of ONE reproduces
+        ``run_query(params)`` bit-for-bit (the stream is identical);
+        larger batches are i.i.d. but not entry-wise reproducible.
+      * ``independent_streams=True`` (implied by passing ``seeds``) —
+        entry (q, t) draws from its own generator seeded
+        ``params.seed + q * n_trials + t`` (or ``seeds[q, t]``) and
+        reproduces ``run_query`` on that seed bit-for-bit, entry by
+        entry.  Slower: one small draw call per entry.
+    """
+    origins = np.atleast_1d(np.asarray(origins, dtype=np.int64))
+    Q, T = len(origins), n_trials
+    if seeds is not None:
+        seeds = np.asarray(seeds, dtype=np.int64)
+        if seeds.shape != (Q, T):
+            raise ValueError(f"seeds must be ({Q}, {T}), got {seeds.shape}")
+    p = params
+    indptr, indices = as_csr(top)
+    e_src, e_dst = directed_edges(indptr, indices)
+    edge_keys = e_src * top.n + e_dst        # sorted by construction
+    degrees = np.diff(indptr)
+    fw_strategy = "basic" if algorithm in ("cn", "cn_star") else strategy
+
+    uniq: dict = {}
+    st_of_q = np.empty(Q, np.int64)
+    for qi, origin in enumerate(origins):
+        key = int(origin)
+        if key not in uniq:
+            uniq[key] = len(uniq)
+        st_of_q[qi] = uniq[key]
+    uniq_origins = np.array(sorted(uniq, key=uniq.get), np.int64)
+    P_all, D_all, R_all = bfs_tree_csr_multi(
+        indptr, indices, uniq_origins, top.n if p.ttl == 0 else p.ttl)
+    sts = [_OriginStatic(top, indptr, indices, e_src, e_dst, edge_keys,
+                         degrees, int(o), p, fw_strategy,
+                         bfs=(P_all[i], D_all[i], R_all[i]))
+           for i, o in enumerate(uniq_origins)]
+
+    ent_st = np.repeat(st_of_q, T)
+    ent_origin = np.repeat(origins, T)
+    if seeds is not None:
+        ent_seeds = seeds.reshape(-1)
+        independent_streams = True
+    else:
+        ent_seeds = p.seed + np.arange(Q * T, dtype=np.int64)
+    res = _run_entries(sts, ent_st, ent_origin, ent_seeds, top.n, p,
+                       algorithm, dynamic, lifetime_mean_s,
+                       independent_streams)
+
+    bm = BatchMetrics.empty(algorithm, Q, T)
+    n_reached_s = np.array([len(st.idx) for st in sts], np.int64)
+    n_edges_s = np.array([st.n_edges_pq for st in sts], np.int64)
+    avg_deg_s = np.array([st.avg_degree for st in sts])
+    bm.n_reached[:] = n_reached_s[st_of_q, None]
+    bm.n_edges_pq[:] = n_edges_s[st_of_q, None]
+    bm.avg_degree[:] = avg_deg_s[st_of_q, None]
+    bm.m_fw[:] = res["m_fw"].reshape(Q, T)
+    bm.b_fw[:] = res["m_fw"].reshape(Q, T) * QUERY_BYTES
+    for f in ("m_bw", "m_rt", "b_bw", "b_rt", "response_time_s",
+              "accuracy"):
+        getattr(bm, f)[:] = res[f].reshape(Q, T)
+    return bm
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,200 @@
+"""Batched multi-query engine: exactness, throughput, comm model.
+
+Covers the PR-1 acceptance criteria:
+  * batch-of-1 reproduces run_query bit-for-bit (both RNG modes);
+  * independent-streams entries reproduce run_query entry-by-entry;
+  * 64 queries x 4 trials on 256 peers in one call, >= 10x faster than
+    a Python loop of 256 run_query calls;
+  * core.fd.comm_bytes matches bytes measured by walking the actual
+    schedules, for CN / CN* / FD across all three schedules.
+"""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.fd import comm_bytes
+from repro.core.topology import SCHEDULES, measure_comm_bytes
+from repro.p2psim import (BatchMetrics, SimParams, barabasi_albert,
+                          run_queries, run_query, waxman)
+from repro.p2psim.graph import (as_csr, bfs_tree, bfs_tree_csr,
+                                bfs_tree_csr_multi)
+
+TOP = barabasi_albert(256, m=2, seed=7)
+WAX = waxman(150, seed=3)
+
+
+# --------------------------------------------------------------------------
+# vectorized BFS == scalar BFS
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("top", [TOP, WAX], ids=["ba", "waxman"])
+def test_bfs_csr_matches_python_bfs(top):
+    indptr, indices = as_csr(top)
+    for origin in (0, 7, top.n - 1):
+        for ttl in (2, 5, top.n):
+            p1, d1, r1 = bfs_tree(top, origin, ttl)
+            p2, d2, r2 = bfs_tree_csr(indptr, indices, origin, ttl)
+            np.testing.assert_array_equal(p1, p2)
+            np.testing.assert_array_equal(d1, d2)
+            np.testing.assert_array_equal(r1, r2)
+
+
+def test_bfs_multi_matches_single():
+    indptr, indices = as_csr(TOP)
+    origins = np.array([0, 13, 200, 13, 255], np.int64)
+    P, D, R = bfs_tree_csr_multi(indptr, indices, origins, TOP.n)
+    for i, o in enumerate(origins):
+        p1, d1, r1 = bfs_tree_csr(indptr, indices, int(o), TOP.n)
+        np.testing.assert_array_equal(P[i], p1)
+        np.testing.assert_array_equal(D[i], d1)
+
+
+# --------------------------------------------------------------------------
+# batch-of-1 bit-for-bit regression
+# --------------------------------------------------------------------------
+
+CASES = [
+    ("fd", {}),
+    ("fd", dict(strategy="basic", dynamic=False)),
+    ("fd", dict(strategy="st1", dynamic=False)),
+    ("fd", dict(strategy="st1+2", dynamic=False)),
+    ("cn", {}),
+    ("cn_star", {}),
+    ("fd", dict(lifetime_mean_s=60.0)),
+    ("fd", dict(dynamic=False, lifetime_mean_s=60.0)),
+    ("fd", dict(lifetime_mean_s=10.0)),
+    ("cn", dict(lifetime_mean_s=30.0)),
+]
+
+
+@pytest.mark.parametrize("alg,kw", CASES,
+                         ids=[f"{a}-{i}" for i, (a, _) in enumerate(CASES)])
+@pytest.mark.parametrize("independent", [False, True],
+                         ids=["shared", "indep"])
+def test_batch_of_one_bit_for_bit(alg, kw, independent):
+    for origin, seed in ((0, 0), (17, 11)):
+        pa = SimParams(seed=seed)
+        met, _ = run_query(TOP, origin, dataclasses.replace(pa),
+                           algorithm=alg, **kw)
+        bm = run_queries(TOP, [origin], dataclasses.replace(pa), 1,
+                         algorithm=alg, independent_streams=independent,
+                         **kw)
+        assert met == bm.query_metrics(0, 0)
+
+
+def test_independent_entries_match_run_query():
+    pa = SimParams(seed=5)
+    origins = np.random.default_rng(0).integers(0, TOP.n, 8)
+    bm = run_queries(TOP, origins, pa, 3, independent_streams=True)
+    assert isinstance(bm, BatchMetrics)
+    for q in range(len(origins)):
+        for t in range(3):
+            met, _ = run_query(
+                TOP, int(origins[q]),
+                dataclasses.replace(pa, seed=pa.seed + q * 3 + t))
+            assert met == bm.query_metrics(q, t), (q, t)
+
+
+def test_explicit_seed_grid():
+    pa = SimParams(seed=0)
+    seeds = np.array([[101, 202], [303, 404]])
+    bm = run_queries(TOP, [0, 9], pa, 2, seeds=seeds)
+    for q in range(2):
+        for t in range(2):
+            met, _ = run_query(
+                TOP, [0, 9][q],
+                dataclasses.replace(pa, seed=int(seeds[q, t])))
+            assert met == bm.query_metrics(q, t)
+
+
+def test_shared_mode_statistically_matches_independent():
+    pa = SimParams(seed=5)
+    origins = np.random.default_rng(0).integers(0, TOP.n, 32)
+    bi = run_queries(TOP, origins, pa, 4, independent_streams=True)
+    bs = run_queries(TOP, origins, pa, 4)
+    # deterministic statics identical; sampled means within a few percent
+    np.testing.assert_array_equal(bi.n_reached, bs.n_reached)
+    np.testing.assert_array_equal(bi.m_bw, bs.m_bw)
+    for f in ("m_fw", "b_rt", "response_time_s"):
+        a, b = getattr(bi, f).mean(), getattr(bs, f).mean()
+        assert abs(a - b) / abs(a) < 0.05, f
+    assert bi.accuracy.mean() == bs.accuracy.mean() == 1.0
+
+
+def test_batch_metrics_summary_and_totals():
+    pa = SimParams(seed=1)
+    bm = run_queries(TOP, [0, 3], pa, 2)
+    s = bm.summary()
+    assert s["n_queries"] == 2 and s["n_trials"] == 2
+    assert s["mean_total_bytes"] == pytest.approx(
+        float(bm.total_bytes.mean()))
+    assert (bm.total_messages == bm.m_fw + bm.m_bw + bm.m_rt).all()
+
+
+# --------------------------------------------------------------------------
+# acceptance: one call, >= 10x over the scalar loop
+# --------------------------------------------------------------------------
+
+def test_speedup_over_run_query_loop():
+    nq, nt = 64, 4
+    pa = SimParams(seed=5)
+    origins = np.random.default_rng(0).integers(0, TOP.n, nq)
+    run_queries(TOP, origins, pa, nt)               # warm numpy caches
+    batch_s = min(_timed(lambda: run_queries(TOP, origins, pa, nt))
+                  for _ in range(5))
+
+    def loop():
+        for q in range(nq):
+            for t in range(nt):
+                run_query(TOP, int(origins[q]),
+                          dataclasses.replace(pa,
+                                              seed=pa.seed + q * nt + t))
+    loop_s = _timed(loop)
+    assert loop_s / batch_s >= 10.0, (
+        f"batch {batch_s * 1e3:.0f}ms vs loop {loop_s * 1e3:.0f}ms "
+        f"= {loop_s / batch_s:.1f}x")
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# --------------------------------------------------------------------------
+# comm model: closed form == measured from the schedule walk
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("n_dev", [2, 8, 16])
+@pytest.mark.parametrize("k", [1, 20])
+def test_fd_comm_model_matches_measured(schedule, n_dev, k):
+    n_local = 4096
+    assert comm_bytes("fd", n_dev, n_local, k, schedule=schedule) == \
+        measure_comm_bytes("fd", n_dev, n_local, k, schedule=schedule)
+
+
+@pytest.mark.parametrize("algorithm", ["cn", "cn_star"])
+@pytest.mark.parametrize("n_dev", [2, 8, 16])
+def test_baseline_comm_model_matches_measured(algorithm, n_dev):
+    for n_local, k in ((1024, 8), (4096, 20)):
+        assert comm_bytes(algorithm, n_dev, n_local, k) == \
+            measure_comm_bytes(algorithm, n_dev, n_local, k)
+
+
+def test_fd_comm_model_vs_simulator_backward_bytes():
+    """The p2psim side agrees with the paper's b_bw = k·L·(|P_Q|-1):
+    the TPU halving schedule moves the same n-1 lists (Lemma 2)."""
+    pa = SimParams(seed=3)
+    bm = run_queries(TOP, [0], pa, 1, dynamic=False)
+    met = bm.query_metrics(0, 0)
+    assert met.m_bw == met.n_reached - 1
+    assert met.b_bw == pa.k * 10 * (met.n_reached - 1)
+    # TPU halving: n-1 list transfers as well (plus the broadcast term)
+    n_dev = 16
+    merge_only = measure_comm_bytes("fd", n_dev, 4096, pa.k,
+                                    schedule="halving") \
+        - (n_dev - 1) * pa.k * 8
+    assert merge_only == (n_dev - 1) * pa.k * 8
