@@ -1,8 +1,13 @@
-"""Batched multi-query benchmark suite.
+"""Batched multi-query benchmark suite (engine entrypoint).
 
-Sweeps the batched engine over (n_peers, k, churn, algorithm) and the
-TPU-side collectives over (schedule, k), and measures the headline
-speedup of ``run_queries`` against a Python loop of ``run_query`` calls.
+Sweeps ``SimEngine`` over (n_peers, k, churn, policy) and the TPU-side
+collectives over (schedule, k), and measures two headline numbers:
+
+  * ``speedup`` — one batched engine call vs a Python loop of scalar
+    ``run_query_reference`` calls (the PR-1 acceptance measurement);
+  * ``plan_cache`` — a warm engine (compiled ``NetworkPlan`` reused
+    across ``run`` calls) vs a cold engine built per call (the ISSUE-2
+    acceptance measurement; CI asserts warm beats cold).
 
   PYTHONPATH=src python -m benchmarks.multi_query [--fast] [--out PATH]
 
@@ -12,7 +17,7 @@ writes ``BENCH_multi_query.json``:
     "meta":    {"created_unix": float, "fast": bool, "jax": str,
                 "numpy": str},
     "results": [
-      {"suite": "sim",   "n_peers": int, "k": int, "algorithm": str,
+      {"suite": "sim",   "n_peers": int, "k": int, "policy": str,
        "lifetime_s": float|null, "n_queries": int, "n_trials": int,
        "wall_s": float, "queries_per_s": float,
        "mean_total_bytes": float, "mean_total_messages": float,
@@ -20,16 +25,14 @@ writes ``BENCH_multi_query.json``:
       {"suite": "speedup", "n_peers": int, "n_queries": int,
        "n_trials": int, "batch_s": float, "loop_s": float,
        "speedup": float},
+      {"suite": "plan_cache", "n_peers": int, "n_queries": int,
+       "n_trials": int, "n_policies": int, "warm_s": float,
+       "cold_s": float, "speedup": float},
       {"suite": "tpu", "schedule": str, "k": int, "n_dev": int,
        "n_local": int, "model_bytes": int, "measured_bytes": int,
        "wall_us_per_call": float}
     ]
   }
-
-The ``speedup`` suite is the acceptance measurement: 64 queries × 4
-trials on a 256-peer BA topology vs the same 256 queries run one
-``run_query`` call at a time (best-of-N both sides, to shrug off noisy
-CI neighbors).
 """
 from __future__ import annotations
 
@@ -39,7 +42,10 @@ import time
 
 import numpy as np
 
-from repro.p2psim import SimParams, barabasi_albert, run_queries, run_query
+from repro.engine import QuerySpec, SimEngine, get_policy
+from repro.p2psim import SimParams, barabasi_albert, run_query_reference
+
+SIM_POLICIES = ("fd-dynamic", "cn", "cn-star")
 
 
 def sim_sweep(fast: bool = False):
@@ -50,19 +56,23 @@ def sim_sweep(fast: bool = False):
     nq, nt = (16, 2) if fast else (32, 4)
     for n_peers in sizes:
         top = barabasi_albert(n_peers, m=2, seed=7)
-        origins = np.random.default_rng(0).integers(0, n_peers, nq)
+        origins = tuple(int(o) for o in np.random.default_rng(0)
+                        .integers(0, n_peers, nq))
+        engine = SimEngine(top)       # NetworkPlan shared by the sweep
         for k in ks:
-            p = SimParams(seed=0, k=k)
+            spec = QuerySpec(origins=origins, n_trials=nt, k=k, seed=0)
             for lt in lifetimes:
-                for alg in ("fd", "cn", "cn_star"):
-                    kw = {} if lt is None else {"lifetime_mean_s": lt}
-                    t0 = time.perf_counter()
-                    bm = run_queries(top, origins, p, nt, algorithm=alg,
-                                     **kw)
+                for name in SIM_POLICIES:
+                    pol = get_policy(name)
+                    if lt is not None:
+                        pol = pol.variant(lifetime_mean_s=lt)
+                    engine.run(spec, pol)   # warm the plan so every row
+                    t0 = time.perf_counter()  # times execution, not build
+                    bm = engine.run(spec, pol).metrics
                     wall = time.perf_counter() - t0
                     results.append({
                         "suite": "sim", "n_peers": n_peers, "k": k,
-                        "algorithm": alg, "lifetime_s": lt,
+                        "policy": name, "lifetime_s": lt,
                         "n_queries": nq, "n_trials": nt, "wall_s": wall,
                         "queries_per_s": nq * nt / wall,
                         "mean_total_bytes": float(bm.total_bytes.mean()),
@@ -76,24 +86,58 @@ def sim_sweep(fast: bool = False):
 
 
 def speedup_bench(fast: bool = False):
-    """The acceptance measurement: batched vs looped, best-of-N."""
+    """Batched engine call vs scalar-reference loop, best-of-N."""
     n_peers, nq, nt = 256, 64, 4
     top = barabasi_albert(n_peers, m=2, seed=7)
     p = SimParams(seed=5)
     origins = np.random.default_rng(0).integers(0, n_peers, nq)
-    run_queries(top, origins, p, nt)                  # warm numpy caches
+    engine = SimEngine(top, p)
+    spec = QuerySpec(origins=tuple(int(o) for o in origins), n_trials=nt)
+    engine.run(spec)                                  # warm numpy caches
     reps_b, reps_l = (3, 1) if fast else (5, 2)
-    batch_s = min(_timed(lambda: run_queries(top, origins, p, nt))
-                  for _ in range(reps_b))
+    batch_s = min(_timed(lambda: SimEngine(top, p).run(spec))
+                  for _ in range(reps_b))             # cold, like the loop
     def loop():
         for q in range(nq):
             for t in range(nt):
-                run_query(top, int(origins[q]),
-                          dataclasses.replace(p, seed=p.seed + q * nt + t))
+                run_query_reference(
+                    top, int(origins[q]),
+                    dataclasses.replace(p, seed=p.seed + q * nt + t))
     loop_s = min(_timed(loop) for _ in range(reps_l))
     return [{"suite": "speedup", "n_peers": n_peers, "n_queries": nq,
              "n_trials": nt, "batch_s": batch_s, "loop_s": loop_s,
              "speedup": loop_s / batch_s}]
+
+
+def plan_cache_bench(fast: bool = False):
+    """Warm NetworkPlan reuse vs cold per-call preprocessing.
+
+    The warm engine runs the same workload (three policies over the same
+    origin set) on one prepared engine; the cold side builds a fresh
+    ``SimEngine`` — CSR, directed edges, BFS trees, forward masks — for
+    every call, which is exactly what the legacy ``run_queries`` shim
+    does.  Best-of-N both sides.
+    """
+    n_peers, nq, nt = 256, 64, 1
+    top = barabasi_albert(n_peers, m=2, seed=7)
+    p = SimParams(seed=3)
+    spec = QuerySpec(origins=tuple(int(o) for o in np.random.default_rng(1)
+                                   .integers(0, n_peers, nq)), n_trials=nt)
+    engine = SimEngine(top, p)
+    def warm():
+        for name in SIM_POLICIES:
+            engine.run(spec, name)
+    def cold():
+        for name in SIM_POLICIES:
+            SimEngine(top, p).run(spec, name)
+    warm()                                            # populate the plan
+    reps = 5                    # best-of-5 even in --fast: the CI gate
+    warm_s = min(_timed(warm) for _ in range(reps))   # asserts warm < cold
+    cold_s = min(_timed(cold) for _ in range(reps))
+    return [{"suite": "plan_cache", "n_peers": n_peers, "n_queries": nq,
+             "n_trials": nt, "n_policies": len(SIM_POLICIES),
+             "warm_s": warm_s, "cold_s": cold_s,
+             "speedup": cold_s / warm_s}]
 
 
 def tpu_sweep(fast: bool = False):
@@ -143,7 +187,8 @@ def collect(fast: bool = False) -> dict:
     return {
         "meta": {"created_unix": time.time(), "fast": fast,
                  "jax": jax.__version__, "numpy": np.__version__},
-        "results": sim_sweep(fast) + speedup_bench(fast) + tpu_sweep(fast),
+        "results": (sim_sweep(fast) + speedup_bench(fast)
+                    + plan_cache_bench(fast) + tpu_sweep(fast)),
     }
 
 
@@ -153,7 +198,7 @@ def suite_rows():
     rows = []
     for r in data["results"]:
         if r["suite"] == "sim":
-            tag = (f"multi_query/sim/{r['algorithm']}/n={r['n_peers']}"
+            tag = (f"multi_query/sim/{r['policy']}/n={r['n_peers']}"
                    f"/k={r['k']}")
             rows.append((f"{tag}/qps", r["queries_per_s"],
                          f"{r['n_queries']}x{r['n_trials']} batch"))
@@ -162,6 +207,9 @@ def suite_rows():
         elif r["suite"] == "speedup":
             rows.append(("multi_query/speedup_vs_loop", r["speedup"],
                          "acceptance: >= 10x"))
+        elif r["suite"] == "plan_cache":
+            rows.append(("multi_query/plan_cache_speedup", r["speedup"],
+                         "warm NetworkPlan vs cold; acceptance: > 1x"))
         else:
             rows.append((f"multi_query/tpu/{r['schedule']}/k={r['k']}"
                          "/bytes", r["model_bytes"],
@@ -183,8 +231,10 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(data, f, indent=2)
     sp = [r for r in data["results"] if r["suite"] == "speedup"][0]
+    pc = [r for r in data["results"] if r["suite"] == "plan_cache"][0]
     print(f"wrote {args.out}: {len(data['results'])} results; "
-          f"speedup_vs_loop={sp['speedup']:.1f}x")
+          f"speedup_vs_loop={sp['speedup']:.1f}x; "
+          f"plan_cache warm/cold={pc['speedup']:.2f}x")
 
 
 if __name__ == "__main__":

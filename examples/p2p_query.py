@@ -1,14 +1,17 @@
-"""The paper's experiment, interactively: execute a Top-k query over a
-BRITE-like unstructured overlay and compare FD / CN / CN* plus the
-traffic-reduction strategies and churn handling.
+"""The paper's experiment, interactively: execute Top-k queries over a
+BRITE-like unstructured overlay and compare the whole policy registry —
+FD / CN / CN*, the traffic-reduction strategies, the statistics
+heuristic, and churn handling — through the unified engine API.
+
+One ``SimEngine`` serves every comparison: the compiled ``NetworkPlan``
+(CSR, BFS trees, forward masks, auto-TTL) is built once and reused.
 
 Run:  PYTHONPATH=src python examples/p2p_query.py [--peers 2000] [--k 20]
 """
 import argparse
 
-from repro.p2psim import SimParams, barabasi_albert, run_query, waxman
-from repro.p2psim.graph import eccentricity_ttl
-from repro.p2psim.simulate import run_statistics_heuristic
+from repro.engine import QuerySpec, SimEngine, get_policy
+from repro.p2psim import SimParams, barabasi_albert, waxman
 
 
 def main():
@@ -21,34 +24,41 @@ def main():
 
     gen = barabasi_albert if args.topology == "ba" else waxman
     top = gen(args.peers, seed=args.seed)
-    pa = SimParams(k=args.k, seed=args.seed)
+    engine = SimEngine(top, SimParams(k=args.k, seed=args.seed))
+    spec = QuerySpec(origins=(0,))
     print(f"overlay: {args.topology}, {args.peers} peers, "
           f"avg degree {top.avg_degree():.2f}, "
-          f"TTL*={eccentricity_ttl(top, 0)}")
+          f"TTL*={engine.plan.auto_ttl(0)}")
 
     print("\n-- algorithms (paper §5.2/5.3) --")
-    print(f"{'algo':10s} {'messages':>10s} {'bytes':>12s} "
+    print(f"{'policy':10s} {'messages':>10s} {'bytes':>12s} "
           f"{'resp (s)':>9s} {'accuracy':>8s}")
-    for alg in ("fd", "cn_star", "cn"):
-        met, _ = run_query(top, 0, pa, algorithm=alg)
-        print(f"{alg:10s} {met.total_messages:>10,} {met.total_bytes:>12,} "
+    for name in ("fd-dynamic", "cn-star", "cn"):
+        met = engine.run(spec, name).query_metrics()
+        print(f"{name:10s} {met.total_messages:>10,} "
+              f"{met.total_bytes:>12,} "
               f"{met.response_time_s:>9.1f} {met.accuracy:>8.2f}")
 
     print("\n-- forward strategies (paper §3.3) --")
-    for strat in ("basic", "st1", "st1+2"):
-        met, _ = run_query(top, 0, pa, strategy=strat, dynamic=False)
-        print(f"{strat:10s} m_fw={met.m_fw:>8,}  total "
+    for name in ("fd-basic", "fd-st1", "fd-st1+2"):
+        met = engine.run(spec, name).query_metrics()
+        print(f"{name:10s} m_fw={met.m_fw:>8,}  total "
               f"bytes={met.total_bytes:>10,}")
 
     print("\n-- statistics heuristic (paper Fig 7) --")
     for z in (0.4, 0.8, 1.0):
-        _, _, red, acc = run_statistics_heuristic(top, 0, pa, z=z)
-        print(f"z={z:.1f}: comm -{red:.0%}, accuracy {acc:.0%}")
+        res = engine.run(spec, get_policy("fd-stats").variant(z=z))
+        print(f"z={z:.1f}: comm -{res.extras['comm_reduction']:.0%}, "
+              f"accuracy {res.extras['accuracy']:.0%}")
 
     print("\n-- churn (paper Fig 8) --")
+    basic = get_policy("fd-st1+2")          # no urgent lists / rerouting
+    dyn = get_policy("fd-dynamic")
     for lt in (1, 4, 30):
-        mb, _ = run_query(top, 0, pa, dynamic=False, lifetime_mean_s=lt * 60)
-        md, _ = run_query(top, 0, pa, dynamic=True, lifetime_mean_s=lt * 60)
+        mb = engine.run(spec, basic.variant(
+            lifetime_mean_s=lt * 60.0)).query_metrics()
+        md = engine.run(spec, dyn.variant(
+            lifetime_mean_s=lt * 60.0)).query_metrics()
         print(f"lifetime {lt:>3}min: FD-Basic acc={mb.accuracy:.2f}  "
               f"FD-Dynamic acc={md.accuracy:.2f}")
 

@@ -14,12 +14,14 @@ import jax.numpy as jnp
 import numpy as np
 
 # ---- 1. the paper: a Top-k query over an unstructured overlay -----------
-from repro.p2psim import SimParams, barabasi_albert, run_query
+from repro.engine import QuerySpec, SimEngine
+from repro.p2psim import SimParams, barabasi_albert
 
 top = barabasi_albert(500, m=2, seed=0)
-for alg in ("fd", "cn", "cn_star"):
-    met, _ = run_query(top, 0, SimParams(seed=0), algorithm=alg)
-    print(f"[p2p ] {alg:8s} bytes={met.total_bytes:>10,}  "
+engine = SimEngine(top, SimParams(seed=0))    # NetworkPlan compiled once
+for pol in ("fd-dynamic", "cn", "cn-star"):
+    met = engine.run(QuerySpec(origins=(0,)), pol).query_metrics()
+    print(f"[p2p ] {pol:10s} bytes={met.total_bytes:>10,}  "
           f"resp={met.response_time_s:8.1f}s  acc={met.accuracy:.2f}")
 
 # ---- 2. FD as a mesh collective -----------------------------------------

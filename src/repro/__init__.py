@@ -1,2 +1,19 @@
 """repro — FD (fully-distributed top-k) TPU framework."""
 __version__ = "0.1.0"
+
+# Unified engine surface (ISSUE 2): one import path for the query API.
+# Resolved lazily so ``import repro`` stays dependency-free (DeviceEngine
+# pulls in JAX, SimEngine pulls in the numpy simulator).
+_ENGINE_EXPORTS = ("QuerySpec", "Policy", "TopKResult", "NetworkPlan",
+                   "SimEngine", "DeviceEngine", "get_policy",
+                   "register_policy", "available_policies",
+                   "policy_from_legacy")
+
+__all__ = list(_ENGINE_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        import repro.engine as _engine
+        return getattr(_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

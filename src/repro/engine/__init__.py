@@ -1,0 +1,30 @@
+"""Unified Top-k query engine: QuerySpec + Policy registry + compiled
+NetworkPlan, across the sim and device backends.
+
+    from repro.engine import SimEngine, QuerySpec
+
+    engine = SimEngine(topology)            # compiles a NetworkPlan once
+    res = engine.run(QuerySpec(origins=(0, 7), n_trials=4), "fd-dynamic")
+    res.metrics.summary()                   # per-entry BatchMetrics
+
+    engine.run(QuerySpec(origins=(0, 7)), "cn-star")   # plan reused
+
+``DeviceEngine`` exposes the same surface over the JAX shard_map
+collectives (it is imported lazily — touching it pulls in JAX).
+"""
+from repro.engine.api import (Policy, QuerySpec, TopKResult,  # noqa: F401
+                              available_policies, get_policy,
+                              policy_from_legacy, register_policy)
+from repro.engine.plan import NetworkPlan  # noqa: F401
+from repro.engine.sim import SimEngine  # noqa: F401
+
+__all__ = ["QuerySpec", "Policy", "TopKResult", "NetworkPlan", "SimEngine",
+           "DeviceEngine", "available_policies", "get_policy",
+           "policy_from_legacy", "register_policy"]
+
+
+def __getattr__(name):
+    if name == "DeviceEngine":                  # lazy: imports JAX
+        from repro.engine.device import DeviceEngine
+        return DeviceEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

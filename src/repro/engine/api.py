@@ -1,0 +1,181 @@
+"""QuerySpec / Policy / TopKResult — the engine's shared vocabulary.
+
+The paper's FD framework is "a family of algorithms" (FD-Basic,
+Strategy 1, Strategy 1+2, FD-Dynamic, the CN/CN* baselines, and the
+§3.3 statistics heuristic).  This module separates the three concerns
+that the legacy string-flag surface conflated:
+
+  * a **QuerySpec** says WHAT to ask — k, origins, trials, RNG mode;
+  * a **Policy** says HOW to execute it — one named member of the
+    algorithm family, owning its forward / merge / churn knobs;
+  * an **engine backend** says WHERE it runs — the numpy overlay
+    simulator (``SimEngine``) or a JAX device mesh (``DeviceEngine``).
+
+Every backend returns the same ``TopKResult``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+from repro.p2psim.metrics import BatchMetrics, QueryMetrics
+
+RNG_MODES = ("shared", "independent")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """What to ask: k, where queries originate, trials, RNG derivation.
+
+    rng:
+      * ``"shared"`` — one generator seeded ``seed`` issues batch-shaped
+        draws (fast; a batch of one is bit-for-bit the scalar reference);
+      * ``"independent"`` — entry (q, t) draws from its own generator
+        seeded ``seed + q * n_trials + t`` and reproduces the scalar
+        reference on that seed bit-for-bit, entry by entry.
+
+    ``seeds`` — optional explicit (n_origins, n_trials) integer grid of
+    per-entry seeds; implies ``rng="independent"``.
+
+    ``k`` / ``seed`` of None defer to the engine's ``SimParams``.  The
+    device backend only reads ``k`` (scores are passed to ``run``).
+    """
+    origins: Tuple[int, ...] = (0,)
+    n_trials: int = 1
+    k: Optional[int] = None
+    seed: Optional[int] = None
+    rng: str = "shared"
+    seeds: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.rng not in RNG_MODES:
+            raise ValueError(f"rng must be one of {RNG_MODES}, "
+                             f"got {self.rng!r}")
+        if self.n_trials < 1:
+            raise ValueError(f"n_trials must be >= 1, got {self.n_trials}")
+        if self.seeds is not None and self.rng != "independent":
+            object.__setattr__(self, "rng", "independent")
+
+    @property
+    def independent(self) -> bool:
+        return self.rng == "independent"
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """How to execute: one named member of the paper's algorithm family.
+
+    algorithm: ``"fd"`` | ``"cn"`` | ``"cn_star"`` | ``"fd-stats"``.
+    ``strategy`` / ``dynamic`` are FD's forward- and merge-phase knobs
+    (§3.3 strategies, §4 urgent lists + rerouting); ``lifetime_mean_s``
+    is the churn knob (inf = static network); ``z`` is the fd-stats
+    rank threshold (§3.3, Fig 7).
+    """
+    name: str
+    algorithm: str
+    strategy: str = "st1+2"
+    dynamic: bool = True
+    lifetime_mean_s: float = math.inf
+    z: float = 0.8
+
+    def variant(self, **overrides) -> "Policy":
+        """A tweaked copy, e.g.
+        ``get_policy("fd-dynamic").variant(lifetime_mean_s=60.0)``."""
+        return dataclasses.replace(self, **overrides)
+
+
+_REGISTRY: Dict[str, Policy] = {}
+
+
+def register_policy(policy: Policy, *, overwrite: bool = False) -> Policy:
+    """Add a policy to the global registry (error on duplicate names
+    unless ``overwrite``)."""
+    if not overwrite and policy.name in _REGISTRY:
+        raise ValueError(f"policy {policy.name!r} already registered")
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def get_policy(policy) -> Policy:
+    """Resolve a registered policy name; a ``Policy`` passes through."""
+    if isinstance(policy, Policy):
+        return policy
+    try:
+        return _REGISTRY[policy]
+    except KeyError:
+        raise KeyError(f"unknown policy {policy!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def available_policies() -> Tuple[str, ...]:
+    """Registered policy names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+# The family, named once (paper §3–§5).
+register_policy(Policy("fd-basic", "fd", strategy="basic", dynamic=False))
+register_policy(Policy("fd-st1", "fd", strategy="st1", dynamic=False))
+register_policy(Policy("fd-st1+2", "fd", strategy="st1+2", dynamic=False))
+register_policy(Policy("fd-dynamic", "fd", strategy="st1+2", dynamic=True))
+register_policy(Policy("cn", "cn"))
+register_policy(Policy("cn-star", "cn_star"))
+register_policy(Policy("fd-stats", "fd-stats", z=0.8))
+
+
+def policy_from_legacy(algorithm: str = "fd", strategy: str = "st1+2",
+                       dynamic: bool = True,
+                       lifetime_mean_s: float = math.inf) -> Policy:
+    """Map the legacy ``run_query``/``run_queries`` kwargs to a policy.
+
+    Combinations matching a registered policy resolve to it by name;
+    anything else gets an anonymous policy carrying the same knobs.
+    """
+    for pol in _REGISTRY.values():
+        if pol.algorithm != algorithm or pol.algorithm == "fd-stats":
+            continue
+        if algorithm in ("cn", "cn_star") or (
+                pol.strategy == strategy and pol.dynamic == dynamic):
+            base = pol
+            break
+    else:
+        tag = "dynamic" if dynamic else "static"
+        base = Policy(f"{algorithm}[{strategy},{tag}]", algorithm,
+                      strategy=strategy, dynamic=dynamic)
+    if not math.isinf(lifetime_mean_s):
+        base = base.variant(lifetime_mean_s=lifetime_mean_s)
+    return base
+
+
+@dataclasses.dataclass
+class TopKResult:
+    """What every backend returns.
+
+    The sim backend fills ``metrics`` (per-entry ``BatchMetrics``); the
+    device backend fills ``values`` / ``indices`` (and ``rows`` on the
+    data-retrieval gather path).  ``extras`` carries backend specifics:
+    fd-stats round metrics, the device comm-model bytes, ...
+    """
+    policy: str
+    backend: str                       # "sim" | "device"
+    k: int
+    metrics: Optional[BatchMetrics] = None
+    values: Any = None
+    indices: Any = None
+    rows: Any = None
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def query_metrics(self, q: int = 0, t: int = 0) -> QueryMetrics:
+        """Scalar per-query metrics (sim backend only)."""
+        if self.metrics is None:
+            raise ValueError(
+                f"the {self.backend!r} backend has no per-query metrics")
+        return self.metrics.query_metrics(q, t)
+
+    def summary(self) -> dict:
+        out = {"policy": self.policy, "backend": self.backend, "k": self.k}
+        if self.metrics is not None:
+            out.update(self.metrics.summary())
+        out.update({key: v for key, v in self.extras.items()
+                    if isinstance(v, (int, float, str, bool))})
+        return out

@@ -1,0 +1,110 @@
+"""DeviceEngine — the QuerySpec/Policy surface over JAX shard_map.
+
+Wraps the ``fd_topk`` / ``fd_topk_gather`` collectives (devices play
+peers, ppermute schedules play the merge-and-backward phase) behind the
+same engine API as ``SimEngine``.  The compiled plan here is the jitted
+shard_map program: callables are cached per (path, k, algorithm,
+schedule) and XLA's own shape-keyed cache makes repeated ``run`` calls
+on the same mesh reuse the compiled executable.
+
+Policy mapping: every ``fd-*`` policy lowers to the FD collective (the
+jitted program *is* the query — compile-time flooding makes the §3.3
+forward strategies and §4 churn handling moot on a reliable fabric);
+``cn`` / ``cn-star`` lower to the paper's baselines; ``fd-stats`` has
+no device backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+from repro.engine.api import Policy, QuerySpec, TopKResult, get_policy
+
+_DEVICE_ALGOS = ("fd", "cn", "cn_star")
+
+
+class DeviceEngine:
+    """Unified Top-k engine backend over a JAX device mesh."""
+
+    backend = "device"
+
+    def __init__(self, mesh=None, axis: str = "model", *,
+                 schedule: str = "halving", batch_axes=None,
+                 use_pallas: bool = False):
+        self.axis = axis
+        self.schedule = schedule
+        self.batch_axes = batch_axes
+        self.use_pallas = use_pallas
+        self.mesh = None
+        self._compiled: dict = {}
+        if mesh is not None:
+            self.prepare(mesh)
+
+    def prepare(self, mesh):
+        """Bind (or rebind) the device mesh; drops stale compiled fns."""
+        self.mesh = mesh
+        self._compiled.clear()
+        return mesh
+
+    @property
+    def axis_size(self) -> int:
+        return dict(self.mesh.shape)[self.axis]
+
+    def _fn(self, path: str, k: int, algorithm: str):
+        import jax
+
+        from repro.core import fd
+        key = (path, k, algorithm, self.schedule)
+        fn = self._compiled.get(key)
+        if fn is None:
+            if path == "gather":
+                base = functools.partial(
+                    fd.fd_topk_gather, k=k, mesh=self.mesh, axis=self.axis,
+                    schedule=self.schedule, batch_axes=self.batch_axes)
+            else:
+                base = functools.partial(
+                    fd.fd_topk, k=k, mesh=self.mesh, axis=self.axis,
+                    schedule=self.schedule, algorithm=algorithm,
+                    use_pallas=self.use_pallas, batch_axes=self.batch_axes)
+            fn = jax.jit(base)
+            self._compiled[key] = fn
+        return fn
+
+    def run(self, spec: Optional[QuerySpec] = None,
+            policy: Union[str, Policy] = "fd-dynamic", *,
+            scores, rows=None) -> TopKResult:
+        """Top-k of ``scores`` (sharded over ``axis``) under ``policy``.
+
+        ``rows`` — optional (N, d) sharded table: runs the phase-4
+        data-retrieval gather and fills ``TopKResult.rows`` (FD only).
+        Only ``spec.k`` is read from the spec on this backend.
+        """
+        if self.mesh is None:
+            raise RuntimeError("call DeviceEngine.prepare(mesh) first")
+        spec = spec if spec is not None else QuerySpec()
+        pol = get_policy(policy)
+        if pol.algorithm not in _DEVICE_ALGOS:
+            raise ValueError(
+                f"policy {pol.name!r} (algorithm {pol.algorithm!r}) has no "
+                f"device backend; use one of {_DEVICE_ALGOS}")
+        k = spec.k if spec.k is not None else 20
+        n = scores.shape[-1]
+        extras = {}
+        if n % self.axis_size == 0:
+            from repro.core.fd import comm_bytes
+            extras["model_bytes"] = comm_bytes(
+                pol.algorithm, self.axis_size, n // self.axis_size, k,
+                schedule=self.schedule)
+        if rows is not None:
+            if pol.algorithm != "fd":
+                raise ValueError(
+                    "the data-retrieval gather path is FD-only "
+                    "(CN ships whole shards, not k rows)")
+            vals, idx, got = self._fn("gather", k, pol.algorithm)(scores,
+                                                                  rows)
+            return TopKResult(policy=pol.name, backend=self.backend, k=k,
+                              values=vals, indices=idx, rows=got,
+                              extras=extras)
+        vals, idx = self._fn("topk", k, pol.algorithm)(scores)
+        return TopKResult(policy=pol.name, backend=self.backend, k=k,
+                          values=vals, indices=idx, extras=extras)

@@ -1,0 +1,87 @@
+"""NetworkPlan — compiled, cached preprocessing of one overlay topology.
+
+Everything about a topology that does not depend on the trial RNG is
+computed once and persists across ``SimEngine.run`` calls:
+
+  * the CSR adjacency and directed edge arrays (+ sorted membership
+    keys for the Strategy-2 edge test);
+  * per-origin BFS trees, tree levels, children CSR, and forward-phase
+    static edge masks (``_OriginStatic``), keyed by (origin, ttl,
+    forward strategy);
+  * resolved auto-TTL eccentricities (the ``ttl=0`` case), so repeated
+    queries never re-run the full-depth BFS.
+
+Repeated queries on the same overlay therefore skip all graph
+preprocessing — the warm-vs-cold gap is measured by the ``plan_cache``
+suite in ``benchmarks/multi_query.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.p2psim.graph import (Topology, as_csr, bfs_tree_csr,
+                                bfs_tree_csr_multi, directed_edges)
+from repro.p2psim.simulate import _OriginStatic
+
+
+class NetworkPlan:
+    """Reusable per-topology state shared by every query on an overlay."""
+
+    def __init__(self, top: Topology):
+        self.top = top
+        self.indptr, self.indices = as_csr(top)
+        self.e_src, self.e_dst = directed_edges(self.indptr, self.indices)
+        self.edge_keys = self.e_src * top.n + self.e_dst  # sorted by constr.
+        self.degrees = np.diff(self.indptr)
+        self._statics: Dict[Tuple[int, int, str], _OriginStatic] = {}
+        self._auto_ttl: Dict[int, int] = {}
+
+    def auto_ttl(self, origin: int) -> int:
+        """Resolved auto-TTL (BFS eccentricity), computed once per origin
+        and reused by every later query with ``ttl=0``."""
+        o = int(origin)
+        if o not in self._auto_ttl:
+            _, depth, _ = bfs_tree_csr(self.indptr, self.indices, o,
+                                       self.top.n)
+            self._auto_ttl[o] = int(depth.max())
+        return self._auto_ttl[o]
+
+    def origin_statics(self, origins: np.ndarray, ttl: int,
+                       fw_strategy: str):
+        """(sts, st_of_q): the unique ``_OriginStatic`` per distinct
+        origin (first-appearance order) and the per-query index into it.
+
+        Statics missing from the cache are built with one multi-origin
+        BFS sweep; everything already cached is reused as-is.
+        """
+        uniq: Dict[int, int] = {}
+        st_of_q = np.empty(len(origins), np.int64)
+        for qi, origin in enumerate(origins):
+            key = int(origin)
+            if key not in uniq:
+                uniq[key] = len(uniq)
+            st_of_q[qi] = uniq[key]
+        uniq_origins: List[int] = sorted(uniq, key=uniq.get)
+        missing = [o for o in uniq_origins
+                   if (o, ttl, fw_strategy) not in self._statics]
+        if missing:
+            P_all, D_all, R_all = bfs_tree_csr_multi(
+                self.indptr, self.indices, np.asarray(missing, np.int64),
+                self.top.n if ttl == 0 else ttl)
+            for i, o in enumerate(missing):
+                st = _OriginStatic(self.top, self.indptr, self.indices,
+                                   self.e_src, self.e_dst, self.edge_keys,
+                                   self.degrees, o, ttl, fw_strategy,
+                                   bfs=(P_all[i], D_all[i], R_all[i]))
+                self._statics[(o, ttl, fw_strategy)] = st
+                if ttl == 0:
+                    # the full-depth BFS doubles as the TTL resolution
+                    self._auto_ttl.setdefault(o, st.ttl)
+        sts = [self._statics[(o, ttl, fw_strategy)] for o in uniq_origins]
+        return sts, st_of_q
+
+    def cache_info(self) -> dict:
+        return {"origin_statics": len(self._statics),
+                "auto_ttls": len(self._auto_ttl)}

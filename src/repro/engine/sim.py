@@ -1,0 +1,166 @@
+"""SimEngine — the unified engine over the vectorized numpy simulator.
+
+``prepare(topology)`` compiles a :class:`~repro.engine.plan.NetworkPlan`
+once; every subsequent ``run(spec, policy)`` reuses the cached CSR,
+directed edges, per-origin BFS trees / forward masks, and auto-TTLs, so
+repeated queries on the same overlay skip all graph preprocessing.
+
+Exactness contract (inherited from the PR-1 batch engine and enforced
+by tests/test_engine.py + tests/test_multi_query.py):
+
+  * a shared-stream batch of ONE reproduces ``run_query_reference``
+    bit-for-bit;
+  * ``rng="independent"`` (or explicit ``seeds``) reproduces
+    ``run_query_reference(seed + q * n_trials + t)`` bit-for-bit for
+    EVERY entry, for every registered policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.engine.api import Policy, QuerySpec, TopKResult, get_policy
+from repro.engine.plan import NetworkPlan
+from repro.p2psim.graph import Topology
+from repro.p2psim.metrics import QUERY_BYTES, BatchMetrics, QueryMetrics
+from repro.p2psim.simulate import (SimParams, _run_entries,
+                                   run_query_reference)
+
+_BM_FIELDS = ("m_bw", "m_rt", "b_bw", "b_rt", "response_time_s", "accuracy")
+
+
+def _batch_of_one(met: QueryMetrics) -> BatchMetrics:
+    """Wrap one scalar QueryMetrics as a (1, 1) BatchMetrics."""
+    bm = BatchMetrics.empty(met.algorithm, 1, 1)
+    for f in ("n_reached", "n_edges_pq", "avg_degree", "m_fw", "b_fw") \
+            + _BM_FIELDS:
+        getattr(bm, f)[0, 0] = getattr(met, f)
+    return bm
+
+
+class SimEngine:
+    """Unified Top-k engine backend over the overlay simulator."""
+
+    backend = "sim"
+
+    def __init__(self, top: Optional[Union[Topology, NetworkPlan]] = None,
+                 params: Optional[SimParams] = None):
+        self.params = params if params is not None else SimParams()
+        self.plan: Optional[NetworkPlan] = None
+        if top is not None:
+            self.prepare(top)
+
+    def prepare(self, top: Union[Topology, NetworkPlan]) -> NetworkPlan:
+        """Compile (or adopt) the overlay's NetworkPlan."""
+        self.plan = top if isinstance(top, NetworkPlan) else NetworkPlan(top)
+        return self.plan
+
+    def run(self, spec: Optional[QuerySpec] = None,
+            policy: Union[str, Policy] = "fd-dynamic", *,
+            params: Optional[SimParams] = None) -> TopKResult:
+        """Execute ``spec`` under ``policy`` on the prepared overlay."""
+        if self.plan is None:
+            raise RuntimeError("call SimEngine.prepare(topology) first")
+        spec = spec if spec is not None else QuerySpec()
+        pol = get_policy(policy)
+        p = params if params is not None else self.params
+        if spec.k is not None:
+            p = dataclasses.replace(p, k=spec.k)
+        if spec.seed is not None:
+            p = dataclasses.replace(p, seed=spec.seed)
+        if pol.algorithm == "fd-stats":
+            return self._run_stats(spec, pol, p)
+
+        origins = np.atleast_1d(np.asarray(spec.origins, dtype=np.int64))
+        Q, T = len(origins), spec.n_trials
+        seeds = spec.seeds
+        if seeds is not None:
+            seeds = np.asarray(seeds, dtype=np.int64)
+            if seeds.shape != (Q, T):
+                raise ValueError(
+                    f"seeds must be ({Q}, {T}), got {seeds.shape}")
+            ent_seeds = seeds.reshape(-1)
+        else:
+            ent_seeds = p.seed + np.arange(Q * T, dtype=np.int64)
+
+        fw_strategy = ("basic" if pol.algorithm in ("cn", "cn_star")
+                       else pol.strategy)
+        sts, st_of_q = self.plan.origin_statics(origins, p.ttl, fw_strategy)
+        ent_st = np.repeat(st_of_q, T)
+        ent_origin = np.repeat(origins, T)
+        res = _run_entries(sts, ent_st, ent_origin, ent_seeds,
+                           self.plan.top.n, p, pol.algorithm, pol.dynamic,
+                           pol.lifetime_mean_s, spec.independent)
+
+        bm = BatchMetrics.empty(pol.algorithm, Q, T)
+        n_reached_s = np.array([len(st.idx) for st in sts], np.int64)
+        n_edges_s = np.array([st.n_edges_pq for st in sts], np.int64)
+        avg_deg_s = np.array([st.avg_degree for st in sts])
+        bm.n_reached[:] = n_reached_s[st_of_q, None]
+        bm.n_edges_pq[:] = n_edges_s[st_of_q, None]
+        bm.avg_degree[:] = avg_deg_s[st_of_q, None]
+        bm.m_fw[:] = res["m_fw"].reshape(Q, T)
+        bm.b_fw[:] = res["m_fw"].reshape(Q, T) * QUERY_BYTES
+        for f in _BM_FIELDS:
+            getattr(bm, f)[:] = res[f].reshape(Q, T)
+        return TopKResult(policy=pol.name, backend=self.backend, k=p.k,
+                          metrics=bm)
+
+    # ---- statistics heuristic (paper §3.3 + Fig 7) ----------------------
+
+    def _run_stats(self, spec: QuerySpec, pol: Policy,
+                   p: SimParams) -> TopKResult:
+        """Two-round protocol: round 1 full FD gathers per-child best-rank
+        stats; round 2 forwards Q only to children whose best past score
+        ranked above ``z * k`` in the parent's merged list."""
+        origins = np.atleast_1d(np.asarray(spec.origins, dtype=np.int64))
+        if len(origins) != 1 or spec.n_trials != 1:
+            raise ValueError("fd-stats runs one origin x one trial per call")
+        if spec.seeds is not None:
+            seeds = np.asarray(spec.seeds, dtype=np.int64)
+            if seeds.shape != (1, 1):
+                raise ValueError(f"seeds must be (1, 1), got {seeds.shape}")
+            p = dataclasses.replace(p, seed=int(seeds[0, 0]))
+        origin = int(origins[0])
+        top = self.plan.top
+        if p.ttl == 0:
+            # resolve auto-TTL once from the plan cache and thread it
+            # through both rounds (round 2 prunes AFTER TTL resolution,
+            # so the full-topology eccentricity is the right value twice)
+            p = dataclasses.replace(p, ttl=self.plan.auto_ttl(origin))
+        met1, st = run_query_reference(top, origin, p, return_state=True)
+        children = st["children"]
+        ms = st["merged_scores"]
+        n = top.n
+        keep = np.ones(n, bool)
+        k = p.k
+        for v in range(n):
+            for c in children[v]:
+                if ms[v] is None or ms[c] is None:
+                    continue
+                # best rank of c's subtree contribution within v's merge
+                in_c = np.isin(ms[v], ms[c])
+                ranks = np.flatnonzero(in_c)
+                best = ranks[0] if len(ranks) else k
+                if best >= pol.z * k:
+                    keep[c] = False
+        met2, st2 = run_query_reference(top, origin, p, child_mask=keep,
+                                        return_state=True)
+        # accuracy of round 2 vs round-1 TRUTH (the full reach set) —
+        # pruning shrinks P_Q, so met2.accuracy alone would be trivially 1
+        reached1 = st["reached"]
+        idx1 = np.flatnonzero(reached1)
+        true_scores = st["scores"][idx1].reshape(-1)
+        top_true = np.sort(true_scores)[::-1][:k]
+        got = st2["merged_scores"][origin]
+        acc = float(np.intersect1d(top_true, got).size) / k \
+            if got is not None else 0.0
+        reduction = 1.0 - met2.total_bytes / max(met1.total_bytes, 1)
+        return TopKResult(
+            policy=pol.name, backend=self.backend, k=k,
+            metrics=_batch_of_one(met2),
+            extras={"metrics_full": met1, "metrics_pruned": met2,
+                    "comm_reduction": reduction, "accuracy": acc,
+                    "z": pol.z})

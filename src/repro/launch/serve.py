@@ -2,8 +2,10 @@
 
 This is the paper-shaped end-to-end path: every decode step executes a
 Top-k "query" over the vocab axis (sharded across the ``model`` mesh
-axis) using the FD merge-and-backward; ``--algorithm cn|cn_star`` runs
-the paper's baselines for comparison (benchmarks/tpu_comm uses this).
+axis) using the FD merge-and-backward.  ``--policy`` selects a member
+of the ``repro.engine`` registry (``fd-dynamic`` / ``cn`` /
+``cn-star``); the legacy ``--algorithm cn|cn_star`` flag still works
+and is mapped onto a policy (benchmarks/tpu_comm uses this).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -115,11 +117,24 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--policy", default=None,
+                    help="engine policy name (fd-dynamic / cn / cn-star; "
+                         "see repro.engine); overrides --algorithm")
     ap.add_argument("--algorithm", default="fd",
-                    choices=("fd", "cn", "cn_star"))
+                    choices=("fd", "cn", "cn_star"),
+                    help="legacy algorithm flag (mapped onto a policy)")
     ap.add_argument("--schedule", default="halving",
                     choices=("halving", "doubling", "ring"))
     args = ap.parse_args()
+
+    from repro.engine import get_policy, policy_from_legacy
+    try:
+        pol = (get_policy(args.policy) if args.policy
+               else policy_from_legacy(args.algorithm))
+    except KeyError as e:
+        raise SystemExit(f"--policy: {e.args[0]}")
+    if pol.algorithm not in ("fd", "cn", "cn_star"):
+        raise SystemExit(f"policy {pol.name!r} has no device backend")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -150,7 +165,7 @@ def main():
 
     baxes = batch_axes(dict(mesh.shape))
     serve_step = jax.jit(
-        make_serve_step(cfg, mesh, k=args.k, algorithm=args.algorithm,
+        make_serve_step(cfg, mesh, k=args.k, algorithm=pol.algorithm,
                         schedule=args.schedule, batch_axes=baxes),
         donate_argnums=(1,))
 
@@ -165,7 +180,7 @@ def main():
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
     toks = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"arch={cfg.name} algo={args.algorithm} "
+    print(f"arch={cfg.name} policy={pol.name} "
           f"prefill {args.prompt_len} tok in {t_prefill:.2f}s; "
           f"decoded {args.gen - 1} steps in {t_decode:.2f}s "
           f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")

@@ -1,4 +1,20 @@
 from repro.p2psim.graph import Topology, barabasi_albert, waxman  # noqa: F401
 from repro.p2psim.metrics import BatchMetrics, QueryMetrics  # noqa: F401
 from repro.p2psim.simulate import (  # noqa: F401
-    SimParams, run_queries, run_query, run_statistics_heuristic)
+    SimParams, run_queries, run_query, run_query_reference,
+    run_statistics_heuristic)
+
+# Unified engine surface (ISSUE 2), re-exported for one import path.
+# Resolved lazily: repro.engine imports this package's modules, so an
+# eager import here would be circular — and DeviceEngine pulls in JAX.
+_ENGINE_EXPORTS = ("QuerySpec", "Policy", "TopKResult", "NetworkPlan",
+                   "SimEngine", "DeviceEngine", "get_policy",
+                   "register_policy", "available_policies",
+                   "policy_from_legacy")
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        import repro.engine as _engine
+        return getattr(_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -29,8 +29,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.p2psim.graph import (Topology, as_csr, bfs_tree, bfs_tree_csr,
-                                bfs_tree_csr_multi, directed_edges)
+from repro.p2psim.graph import Topology, bfs_tree, bfs_tree_csr
 from repro.p2psim.metrics import (ENTRY_BYTES_PAPER, QUERY_BYTES,
                                   BatchMetrics, QueryMetrics)
 
@@ -163,12 +162,19 @@ def forward_messages(top: Topology, origin: int, parent, depth, reached,
 # full query simulation
 # --------------------------------------------------------------------------
 
-def run_query(top: Topology, origin: int = 0, params: SimParams = SimParams(),
-              *, algorithm: str = "fd", strategy: str = "st1+2",
-              dynamic: bool = True, lifetime_mean_s: float = float("inf"),
-              child_mask: Optional[np.ndarray] = None,
-              return_state: bool = False):
-    """Simulate one Top-k query.  Returns QueryMetrics (+ state dict).
+def run_query_reference(top: Topology, origin: int = 0,
+                        params: Optional[SimParams] = None,
+                        *, algorithm: str = "fd", strategy: str = "st1+2",
+                        dynamic: bool = True,
+                        lifetime_mean_s: float = float("inf"),
+                        child_mask: Optional[np.ndarray] = None,
+                        return_state: bool = False):
+    """Simulate one Top-k query — the scalar REFERENCE implementation.
+
+    This is the executable spec the engine is held to: the unified
+    ``repro.engine.SimEngine`` (and the ``run_query``/``run_queries``
+    shims over it) must reproduce it bit-for-bit.  Returns QueryMetrics
+    (+ state dict).
 
     algorithm: "fd" | "cn" | "cn_star".
     strategy (fd): "basic" | "st1" | "st1+2" (forward-phase counting).
@@ -176,12 +182,19 @@ def run_query(top: Topology, origin: int = 0, params: SimParams = SimParams(),
     child_mask: bool (n,) — peers excluded from forwarding (statistics
     heuristic §3.3); excluded subtrees never receive Q.
     """
-    p = params
+    p = params if params is not None else SimParams()
     rng = np.random.default_rng(p.seed)
     n = top.n
+    pre_bfs = None
     if p.ttl == 0:
-        from repro.p2psim.graph import eccentricity_ttl
-        p = dataclasses.replace(p, ttl=eccentricity_ttl(top, origin))
+        if child_mask is None:
+            # auto TTL = eccentricity: the full-depth BFS *is* the
+            # TTL-limited BFS at that TTL, so resolve and reuse in one pass
+            pre_bfs = bfs_tree(top, origin, n)
+            p = dataclasses.replace(p, ttl=int(pre_bfs[1].max()))
+        else:
+            from repro.p2psim.graph import eccentricity_ttl
+            p = dataclasses.replace(p, ttl=eccentricity_ttl(top, origin))
 
     # ---- reach set (optionally pruned) ---------------------------------
     if child_mask is not None:
@@ -192,7 +205,8 @@ def run_query(top: Topology, origin: int = 0, params: SimParams = SimParams(),
         parent, depth, reached = bfs_tree(pruned, origin, p.ttl)
         count_top = pruned
     else:
-        parent, depth, reached = bfs_tree(top, origin, p.ttl)
+        parent, depth, reached = (pre_bfs if pre_bfs is not None
+                                  else bfs_tree(top, origin, p.ttl))
         count_top = top
     idx = np.flatnonzero(reached)
     n_r = len(idx)
@@ -404,13 +418,41 @@ def _accuracy(scores, idx, delivered, k) -> float:
     return float(np.intersect1d(top_true, got).size) / k
 
 
+def run_query(top: Topology, origin: int = 0,
+              params: Optional[SimParams] = None,
+              *, algorithm: str = "fd", strategy: str = "st1+2",
+              dynamic: bool = True, lifetime_mean_s: float = float("inf"),
+              child_mask: Optional[np.ndarray] = None,
+              return_state: bool = False):
+    """Simulate one Top-k query — thin shim over ``repro.engine``.
+
+    Kept for backward compatibility; ``repro.engine.SimEngine`` is the
+    entrypoint (and amortizes its compiled ``NetworkPlan`` across calls,
+    which this per-call shim cannot).  Bit-for-bit equal to
+    ``run_query_reference`` — see tests/test_engine.py.  The
+    ``child_mask`` / ``return_state`` variants carry per-node state the
+    batch engine does not expose and run the reference directly.
+    """
+    if child_mask is not None or return_state:
+        return run_query_reference(
+            top, origin, params, algorithm=algorithm, strategy=strategy,
+            dynamic=dynamic, lifetime_mean_s=lifetime_mean_s,
+            child_mask=child_mask, return_state=return_state)
+    from repro.engine import QuerySpec, SimEngine, policy_from_legacy
+    pol = policy_from_legacy(algorithm, strategy, dynamic, lifetime_mean_s)
+    res = SimEngine(top, params).run(QuerySpec(origins=(int(origin),)), pol)
+    return res.metrics.query_metrics(0, 0), None
+
+
 # ==========================================================================
 # batched multi-query engine
 # ==========================================================================
 #
-# ``run_queries`` evaluates a (n_queries × n_trials) batch in one call.
-# Entry (q, t) is seeded ``params.seed + q * n_trials + t`` and reproduces
-# ``run_query`` on that seed BIT-FOR-BIT: the per-entry RNG streams draw
+# The machinery below executes a (n_queries × n_trials) batch in one
+# call; ``repro.engine.SimEngine`` orchestrates it (``run_queries`` is a
+# shim).  Entry (q, t) is seeded ``params.seed + q * n_trials + t`` and
+# reproduces ``run_query_reference`` on that seed BIT-FOR-BIT: the
+# per-entry RNG streams draw
 # the same arrays in the same order, per-element float expressions are
 # identical, and every reduction that crosses elements is either integer,
 # a max, or a top-k selection over almost-surely-distinct values — all
@@ -469,20 +511,19 @@ class _OriginStatic:
     """Trial-independent per-origin state (shared by all trials)."""
 
     def __init__(self, top: Topology, indptr, indices, e_src, e_dst,
-                 edge_keys, degrees, origin: int, params: SimParams,
+                 edge_keys, degrees, origin: int, ttl: int,
                  fw_strategy: str, bfs=None):
         n = top.n
         if bfs is not None:           # precomputed by the multi-origin BFS
             parent, depth, reached = bfs
-            self.ttl = (int(depth.max()) if params.ttl == 0
-                        else params.ttl)
-        elif params.ttl == 0:
+            self.ttl = int(depth.max()) if ttl == 0 else ttl
+        elif ttl == 0:
             # auto TTL = eccentricity: the full-depth BFS *is* the
             # TTL-limited BFS at that TTL, so reuse it
             parent, depth, reached = bfs_tree_csr(indptr, indices, origin, n)
             self.ttl = int(depth.max())
         else:
-            self.ttl = params.ttl
+            self.ttl = ttl
             parent, depth, reached = bfs_tree_csr(indptr, indices, origin,
                                                   self.ttl)
         self.parent, self.depth, self.reached = parent, depth, reached
@@ -940,83 +981,35 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     return out
 
 
-def run_queries(top: Topology, origins, params: SimParams = SimParams(),
+def run_queries(top: Topology, origins,
+                params: Optional[SimParams] = None,
                 n_trials: int = 1, *, algorithm: str = "fd",
                 strategy: str = "st1+2", dynamic: bool = True,
                 lifetime_mean_s: float = float("inf"),
                 seeds=None, independent_streams: bool = False
                 ) -> BatchMetrics:
-    """Batched multi-query simulation: (len(origins) × n_trials) queries
-    in one call, replacing a Python loop of ``run_query`` calls.
+    """Batched multi-query simulation — thin shim over ``repro.engine``.
 
-    BFS trees and forward-phase edge masks are computed once per distinct
-    origin and shared by its trials; all trial-varying work is flattened
-    over the (queries × trials) entry axis and swept with array ops —
-    thousands of concurrent queries per call.
+    Evaluates (len(origins) × n_trials) queries in one call; see
+    ``repro.engine.SimEngine`` (the entrypoint, which additionally
+    caches the compiled ``NetworkPlan`` across calls) for the execution
+    model, and ``QuerySpec`` for the RNG modes:
 
-    RNG modes:
       * default (shared stream) — one generator seeded ``params.seed``
-        issues batch-shaped draws.  A batch of ONE reproduces
-        ``run_query(params)`` bit-for-bit (the stream is identical);
-        larger batches are i.i.d. but not entry-wise reproducible.
+        issues batch-shaped draws; a batch of ONE reproduces
+        ``run_query`` bit-for-bit, larger batches are i.i.d.;
       * ``independent_streams=True`` (implied by passing ``seeds``) —
-        entry (q, t) draws from its own generator seeded
-        ``params.seed + q * n_trials + t`` (or ``seeds[q, t]``) and
-        reproduces ``run_query`` on that seed bit-for-bit, entry by
-        entry.  Slower: one small draw call per entry.
+        entry (q, t) reproduces ``run_query`` with seed
+        ``params.seed + q * n_trials + t`` (or ``seeds[q, t]``)
+        bit-for-bit, entry by entry.
     """
-    origins = np.atleast_1d(np.asarray(origins, dtype=np.int64))
-    Q, T = len(origins), n_trials
-    if seeds is not None:
-        seeds = np.asarray(seeds, dtype=np.int64)
-        if seeds.shape != (Q, T):
-            raise ValueError(f"seeds must be ({Q}, {T}), got {seeds.shape}")
-    p = params
-    indptr, indices = as_csr(top)
-    e_src, e_dst = directed_edges(indptr, indices)
-    edge_keys = e_src * top.n + e_dst        # sorted by construction
-    degrees = np.diff(indptr)
-    fw_strategy = "basic" if algorithm in ("cn", "cn_star") else strategy
-
-    uniq: dict = {}
-    st_of_q = np.empty(Q, np.int64)
-    for qi, origin in enumerate(origins):
-        key = int(origin)
-        if key not in uniq:
-            uniq[key] = len(uniq)
-        st_of_q[qi] = uniq[key]
-    uniq_origins = np.array(sorted(uniq, key=uniq.get), np.int64)
-    P_all, D_all, R_all = bfs_tree_csr_multi(
-        indptr, indices, uniq_origins, top.n if p.ttl == 0 else p.ttl)
-    sts = [_OriginStatic(top, indptr, indices, e_src, e_dst, edge_keys,
-                         degrees, int(o), p, fw_strategy,
-                         bfs=(P_all[i], D_all[i], R_all[i]))
-           for i, o in enumerate(uniq_origins)]
-
-    ent_st = np.repeat(st_of_q, T)
-    ent_origin = np.repeat(origins, T)
-    if seeds is not None:
-        ent_seeds = seeds.reshape(-1)
-        independent_streams = True
-    else:
-        ent_seeds = p.seed + np.arange(Q * T, dtype=np.int64)
-    res = _run_entries(sts, ent_st, ent_origin, ent_seeds, top.n, p,
-                       algorithm, dynamic, lifetime_mean_s,
-                       independent_streams)
-
-    bm = BatchMetrics.empty(algorithm, Q, T)
-    n_reached_s = np.array([len(st.idx) for st in sts], np.int64)
-    n_edges_s = np.array([st.n_edges_pq for st in sts], np.int64)
-    avg_deg_s = np.array([st.avg_degree for st in sts])
-    bm.n_reached[:] = n_reached_s[st_of_q, None]
-    bm.n_edges_pq[:] = n_edges_s[st_of_q, None]
-    bm.avg_degree[:] = avg_deg_s[st_of_q, None]
-    bm.m_fw[:] = res["m_fw"].reshape(Q, T)
-    bm.b_fw[:] = res["m_fw"].reshape(Q, T) * QUERY_BYTES
-    for f in ("m_bw", "m_rt", "b_bw", "b_rt", "response_time_s",
-              "accuracy"):
-        getattr(bm, f)[:] = res[f].reshape(Q, T)
-    return bm
+    from repro.engine import QuerySpec, SimEngine, policy_from_legacy
+    pol = policy_from_legacy(algorithm, strategy, dynamic, lifetime_mean_s)
+    spec = QuerySpec(
+        origins=tuple(int(o) for o in np.atleast_1d(np.asarray(origins))),
+        n_trials=n_trials, seeds=seeds,
+        rng="independent" if independent_streams else "shared")
+    return SimEngine(top, params).run(spec, pol).metrics
 
 
 # --------------------------------------------------------------------------
@@ -1025,38 +1018,16 @@ def run_queries(top: Topology, origins, params: SimParams = SimParams(),
 
 def run_statistics_heuristic(top: Topology, origin: int,
                              params: SimParams, z: float):
-    """Two-round protocol: round 1 full FD gathers per-child best-rank
-    stats; round 2 forwards Q only to children whose best past score
-    ranked above z*k in the parent's merged list.  Returns
-    (metrics_full, metrics_pruned, comm_reduction, accuracy)."""
-    met1, st = run_query(top, origin, params, return_state=True)
-    parent = st["parent"]
-    mo = st["merged_owner"]
-    ms = st["merged_scores"]
-    children = st["children"]
-    n = top.n
-    keep = np.ones(n, bool)
-    k = params.k
-    for v in range(n):
-        for c in children[v]:
-            if ms[v] is None or ms[c] is None:
-                continue
-            # best rank of c's subtree contribution within v's merged list
-            in_c = np.isin(ms[v], ms[c])
-            ranks = np.flatnonzero(in_c)
-            best = ranks[0] if len(ranks) else k
-            if best >= z * k:
-                keep[c] = False
-    met2, st2 = run_query(top, origin, params, child_mask=keep,
-                          return_state=True)
-    # accuracy of round 2 vs round-1 TRUTH (the full reach set) — pruning
-    # shrinks P_Q, so met2.accuracy alone would be trivially 1
-    reached1 = st["reached"]
-    idx1 = np.flatnonzero(reached1)
-    true_scores = st["scores"][idx1].reshape(-1)
-    top_true = np.sort(true_scores)[::-1][:k]
-    got = st2["merged_scores"][origin]
-    acc = float(np.intersect1d(top_true, got).size) / k \
-        if got is not None else 0.0
-    reduction = 1.0 - met2.total_bytes / max(met1.total_bytes, 1)
-    return met1, met2, reduction, acc
+    """Two-round statistics heuristic — thin shim over the engine's
+    ``"fd-stats"`` policy (see ``SimEngine._run_stats``): round 1 full
+    FD gathers per-child best-rank stats; round 2 forwards Q only to
+    children whose best past score ranked above z*k in the parent's
+    merged list.  Returns (metrics_full, metrics_pruned,
+    comm_reduction, accuracy)."""
+    from repro.engine import QuerySpec, SimEngine, get_policy
+    res = SimEngine(top, params).run(
+        QuerySpec(origins=(int(origin),)),
+        get_policy("fd-stats").variant(z=z))
+    ex = res.extras
+    return (ex["metrics_full"], ex["metrics_pruned"],
+            ex["comm_reduction"], ex["accuracy"])

@@ -1,0 +1,293 @@
+"""Unified engine API (ISSUE 2): QuerySpec + Policy registry + compiled
+NetworkPlan across the sim and device backends.
+
+  * every registered policy runs through SimEngine with bit-exact parity
+    against the scalar ``run_query_reference`` (shared-stream batch of
+    one AND independent streams) and against the legacy shims;
+  * the NetworkPlan is cached across ``run`` calls (no BFS /
+    edge-mask recompute) without changing a single bit of output;
+  * DeviceEngine matches ``fd_topk_gather`` on all three schedules and
+    ``fd_topk`` for the CN / CN* baselines.
+"""
+import dataclasses
+import inspect
+import math
+
+import numpy as np
+import pytest
+
+from repro.engine import (NetworkPlan, Policy, QuerySpec, SimEngine,
+                          TopKResult, available_policies, get_policy,
+                          policy_from_legacy, register_policy)
+from repro.p2psim import (SimParams, barabasi_albert, run_queries,
+                          run_query, run_query_reference,
+                          run_statistics_heuristic, waxman)
+
+TOP = barabasi_albert(220, m=2, seed=7)
+PA = SimParams(seed=11)
+
+STANDARD = [n for n in available_policies() if n != "fd-stats"]
+
+
+def _legacy_kwargs(pol: Policy) -> dict:
+    kw = dict(algorithm=pol.algorithm, strategy=pol.strategy,
+              dynamic=pol.dynamic)
+    if not math.isinf(pol.lifetime_mean_s):
+        kw["lifetime_mean_s"] = pol.lifetime_mean_s
+    return kw
+
+
+# --------------------------------------------------------------------------
+# SimEngine parity: every registered policy, both RNG modes
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", STANDARD)
+def test_sim_engine_shared_batch_of_one_is_reference(name):
+    pol = get_policy(name)
+    engine = SimEngine(TOP)
+    for origin, seed in ((0, 0), (17, 11)):
+        pa = SimParams(seed=seed)
+        met, _ = run_query_reference(TOP, origin, pa, **_legacy_kwargs(pol))
+        res = engine.run(QuerySpec(origins=(origin,), seed=seed), name)
+        assert isinstance(res, TopKResult)
+        assert res.backend == "sim" and res.policy == name
+        assert res.query_metrics(0, 0) == met
+
+
+@pytest.mark.parametrize("name", STANDARD)
+def test_sim_engine_independent_streams_entrywise_reference(name):
+    pol = get_policy(name)
+    origins = (0, 9, 9, 41)
+    engine = SimEngine(TOP, PA)
+    res = engine.run(QuerySpec(origins=origins, n_trials=2,
+                               rng="independent"), name)
+    for q, o in enumerate(origins):
+        for t in range(2):
+            met, _ = run_query_reference(
+                TOP, o, dataclasses.replace(PA, seed=PA.seed + q * 2 + t),
+                **_legacy_kwargs(pol))
+            assert res.query_metrics(q, t) == met, (name, q, t)
+
+
+@pytest.mark.parametrize("name", STANDARD)
+def test_sim_engine_matches_legacy_shims(name):
+    pol = get_policy(name)
+    engine = SimEngine(TOP, PA)
+    res = engine.run(QuerySpec(origins=(3, 12), n_trials=2), name)
+    bm = run_queries(TOP, [3, 12], PA, 2, **_legacy_kwargs(pol))
+    for f in ("n_reached", "m_fw", "m_bw", "m_rt", "b_fw", "b_bw", "b_rt",
+              "response_time_s", "accuracy"):
+        np.testing.assert_array_equal(getattr(res.metrics, f),
+                                      getattr(bm, f), err_msg=f)
+    # the scalar shim is a batch of ONE (shared stream) over the engine
+    one = engine.run(QuerySpec(origins=(3,)), name)
+    met, _ = run_query(TOP, 3, PA, **_legacy_kwargs(pol))
+    assert one.query_metrics(0, 0) == met
+
+
+def test_churn_policy_variant_parity():
+    pol = get_policy("fd-dynamic").variant(lifetime_mean_s=45.0)
+    res = SimEngine(TOP, PA).run(QuerySpec(origins=(0,)), pol)
+    met, _ = run_query_reference(TOP, 0, PA, lifetime_mean_s=45.0)
+    assert res.query_metrics(0, 0) == met
+
+
+def test_spec_k_and_explicit_seeds_override():
+    seeds = np.array([[101, 202], [303, 404]])
+    spec = QuerySpec(origins=(0, 9), n_trials=2, k=7, seeds=seeds)
+    assert spec.rng == "independent"          # implied by seeds
+    res = SimEngine(TOP, PA).run(spec, "fd-st1+2")
+    assert res.k == 7
+    for q, o in enumerate((0, 9)):
+        for t in range(2):
+            met, _ = run_query_reference(
+                TOP, o, dataclasses.replace(PA, k=7, seed=int(seeds[q, t])),
+                strategy="st1+2", dynamic=False)
+            assert res.query_metrics(q, t) == met
+
+
+# --------------------------------------------------------------------------
+# fd-stats policy (two-round statistics heuristic)
+# --------------------------------------------------------------------------
+
+def test_fd_stats_policy_matches_legacy_and_reduces_traffic():
+    engine = SimEngine(TOP, PA)
+    res = engine.run(QuerySpec(origins=(0,)),
+                     get_policy("fd-stats").variant(z=0.8))
+    m1, m2, red, acc = run_statistics_heuristic(TOP, 0, PA, 0.8)
+    assert res.extras["metrics_full"] == m1
+    assert res.extras["metrics_pruned"] == m2
+    assert res.extras["comm_reduction"] == red
+    assert res.extras["accuracy"] == acc
+    assert res.query_metrics(0, 0) == m2      # metrics = pruned round
+    assert red > 0.0 and acc > 0.5
+    # the two reference rounds ran against the plan-resolved auto-TTL
+    assert engine.plan.cache_info()["auto_ttls"] == 1
+    with pytest.raises(ValueError):
+        engine.run(QuerySpec(origins=(0, 1)), "fd-stats")
+    # an explicit (1, 1) seeds grid selects the entry's RNG stream
+    seeded = engine.run(QuerySpec(origins=(0,), seeds=[[42]]), "fd-stats")
+    m1s, _, _, _ = run_statistics_heuristic(
+        TOP, 0, dataclasses.replace(PA, seed=42), 0.8)
+    assert seeded.extras["metrics_full"] == m1s
+    with pytest.raises(ValueError):
+        engine.run(QuerySpec(origins=(0,), seeds=[[1, 2]]), "fd-stats")
+
+
+# --------------------------------------------------------------------------
+# NetworkPlan caching
+# --------------------------------------------------------------------------
+
+def test_network_plan_reused_and_bit_identical():
+    engine = SimEngine(TOP, PA)
+    spec = QuerySpec(origins=(0, 5, 5), n_trials=2)
+    r1 = engine.run(spec)
+    cached = engine.plan.cache_info()["origin_statics"]
+    assert cached == 2                        # two distinct origins
+    r2 = engine.run(spec)
+    assert engine.plan.cache_info()["origin_statics"] == cached
+    for f in ("m_fw", "m_bw", "b_bw", "b_rt", "response_time_s",
+              "accuracy"):
+        np.testing.assert_array_equal(getattr(r1.metrics, f),
+                                      getattr(r2.metrics, f))
+    # cn needs the "basic" forward masks -> new cache entries, same BFS
+    engine.run(spec, "cn")
+    assert engine.plan.cache_info()["origin_statics"] == 2 * cached
+    # warm results still match a cold engine bit-for-bit
+    r3 = SimEngine(TOP, PA).run(spec)
+    np.testing.assert_array_equal(r2.metrics.response_time_s,
+                                  r3.metrics.response_time_s)
+
+
+def test_plan_is_shareable_and_ttl_param_keyed():
+    plan = NetworkPlan(TOP)
+    e1 = SimEngine(plan, PA)
+    e2 = SimEngine(plan, dataclasses.replace(PA, ttl=3))
+    m_auto = e1.run(QuerySpec(origins=(0,))).query_metrics()
+    m_ttl3 = e2.run(QuerySpec(origins=(0,))).query_metrics()
+    assert e1.plan is e2.plan is plan
+    assert m_ttl3.n_reached < m_auto.n_reached        # TTL 3 truncates
+    ref, _ = run_query_reference(TOP, 0, dataclasses.replace(PA, ttl=3))
+    assert m_ttl3 == ref
+    assert plan.auto_ttl(0) == e1.plan._statics[
+        (0, 0, "st1+2")].ttl          # resolved once, shared
+
+
+def test_prepare_required():
+    with pytest.raises(RuntimeError):
+        SimEngine().run(QuerySpec())
+
+
+# --------------------------------------------------------------------------
+# registry / spec / legacy-kwarg mapping
+# --------------------------------------------------------------------------
+
+def test_registry_surface():
+    assert set(available_policies()) == {
+        "fd-basic", "fd-st1", "fd-st1+2", "fd-dynamic", "cn", "cn-star",
+        "fd-stats"}
+    with pytest.raises(KeyError):
+        get_policy("fd-nope")
+    with pytest.raises(ValueError):
+        register_policy(Policy("cn", "cn"))
+    pol = get_policy("fd-dynamic")
+    assert get_policy(pol) is pol             # Policy passes through
+    assert pol.variant(lifetime_mean_s=9.0).lifetime_mean_s == 9.0
+    assert pol.lifetime_mean_s == math.inf    # variant is a copy
+
+
+def test_policy_from_legacy_mapping():
+    assert policy_from_legacy("fd", "st1+2", True).name == "fd-dynamic"
+    assert policy_from_legacy("fd", "st1+2", False).name == "fd-st1+2"
+    assert policy_from_legacy("fd", "basic", False).name == "fd-basic"
+    assert policy_from_legacy("fd", "st1", False).name == "fd-st1"
+    assert policy_from_legacy("cn").name == "cn"
+    assert policy_from_legacy("cn_star").name == "cn-star"
+    anon = policy_from_legacy("fd", "basic", True)    # no named member
+    assert anon.algorithm == "fd" and anon.dynamic
+    assert policy_from_legacy(
+        "fd", lifetime_mean_s=60.0).lifetime_mean_s == 60.0
+
+
+def test_query_spec_validation():
+    with pytest.raises(ValueError):
+        QuerySpec(rng="both")
+    with pytest.raises(ValueError):
+        QuerySpec(n_trials=0)
+    with pytest.raises(ValueError):           # seeds shape mismatch
+        SimEngine(TOP).run(QuerySpec(origins=(0,), n_trials=2,
+                                     seeds=np.zeros((3, 3), np.int64)))
+
+
+def test_no_shared_mutable_params_default():
+    # the old ``params: SimParams = SimParams()`` module-level instance
+    # was shared across calls; defaults must now be None
+    for fn in (run_query, run_queries, run_query_reference):
+        assert inspect.signature(fn).parameters["params"].default is None
+    m1, _ = run_query(TOP, 0)
+    m2, _ = run_query(TOP, 0)
+    assert m1 == m2
+
+
+def test_waxman_cross_check():
+    wax = waxman(120, seed=3)
+    engine = SimEngine(wax, PA)
+    for name in ("fd-dynamic", "cn-star"):
+        res = engine.run(QuerySpec(origins=(1,)), name)
+        met, _ = run_query_reference(wax, 1, PA,
+                                     **_legacy_kwargs(get_policy(name)))
+        assert res.query_metrics(0, 0) == met
+
+
+# --------------------------------------------------------------------------
+# DeviceEngine: same surface over the shard_map collectives
+# --------------------------------------------------------------------------
+
+def test_device_engine_matches_fd_collectives(devices8):
+    out = devices8("""
+import jax, numpy as np
+from repro.core.fd import fd_topk, fd_topk_gather
+from repro.engine import DeviceEngine, QuerySpec, get_policy
+from repro.jaxcompat import make_mesh
+
+mesh = make_mesh((8,), ("model",))
+scores = jax.random.normal(jax.random.PRNGKey(3), (2, 1024))
+rows = jax.random.normal(jax.random.PRNGKey(6), (1024, 16))
+spec = QuerySpec(k=20)
+for sched in ("halving", "doubling", "ring"):
+    eng = DeviceEngine(mesh, schedule=sched)
+    res = eng.run(spec, "fd-dynamic", scores=scores, rows=rows)
+    rv, ri, rr = fd_topk_gather(scores, rows, 20, mesh, "model",
+                                schedule=sched)
+    np.testing.assert_array_equal(np.asarray(res.values), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(res.indices), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(res.rows), np.asarray(rr))
+    assert res.backend == "device" and res.extras["model_bytes"] > 0
+    # compiled plan reuse: second run hits the cached jitted callable
+    n = len(eng._compiled)
+    res2 = eng.run(spec, "fd-dynamic", scores=scores, rows=rows)
+    assert len(eng._compiled) == n
+    np.testing.assert_array_equal(np.asarray(res2.values),
+                                  np.asarray(res.values))
+eng = DeviceEngine(mesh)
+for pol, alg in (("cn", "cn"), ("cn-star", "cn_star")):
+    res = eng.run(spec, pol, scores=scores)
+    rv, ri = fd_topk(scores, 20, mesh, "model", algorithm=alg)
+    np.testing.assert_array_equal(np.asarray(res.values), np.asarray(rv))
+# every fd-* policy lowers to the same FD collective
+ra = DeviceEngine(mesh).run(spec, "fd-basic", scores=scores)
+rb = DeviceEngine(mesh).run(spec, "fd-dynamic", scores=scores)
+np.testing.assert_array_equal(np.asarray(ra.values), np.asarray(rb.values))
+try:
+    eng.run(spec, "fd-stats", scores=scores)
+    raise SystemExit("fd-stats must not lower to the device backend")
+except ValueError:
+    pass
+try:
+    eng.run(spec, "cn", scores=scores, rows=rows)
+    raise SystemExit("gather path must be FD-only")
+except ValueError:
+    pass
+print("DEVICE_ENGINE_OK")
+""")
+    assert "DEVICE_ENGINE_OK" in out
