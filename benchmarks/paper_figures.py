@@ -14,7 +14,6 @@ paper's claims.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 

@@ -1,0 +1,99 @@
+"""Benchmark regression gate — fail CI when an acceptance row regresses.
+
+Compares a freshly produced ``BENCH_multi_query.json`` against the
+committed baseline and fails when any acceptance-row speedup
+
+  * ``speedup``      — batched engine vs scalar-reference loop (PR 1),
+  * ``plan_cache``   — warm NetworkPlan vs cold rebuild (ISSUE 2),
+  * ``jax_backend``  — jitted JAX engine vs scalar reference (ISSUE 3)
+
+drops by more than ``--tolerance`` (default 20%) below the baseline's,
+or violates its absolute acceptance floor:
+
+  * ``speedup``     >= 10x   (one batched call vs the scalar loop)
+  * ``plan_cache``  >  1x    (warm plan must beat cold)
+  * ``jax_backend`` >= 3x    vs the scalar reference, with the
+    entry-wise ``parity`` bit set (bit-exactness asserted at scale)
+
+Rows are matched on (suite + identity params); a baseline acceptance
+row with no matching current row is itself a failure, so suites cannot
+silently disappear.
+
+  PYTHONPATH=src python -m benchmarks.regression_gate \
+      --current BENCH_multi_query.json \
+      --baseline benchmarks/baselines/BENCH_multi_query.fast.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# identity params per acceptance suite (everything else is measurement)
+_KEYS = {
+    "speedup": ("n_peers", "n_queries", "n_trials"),
+    "plan_cache": ("n_peers", "n_queries", "n_trials", "n_policies"),
+    "jax_backend": ("n_peers", "k", "n_queries", "n_trials"),
+}
+_FLOORS = {"speedup": 10.0, "plan_cache": 1.0, "jax_backend": 3.0}
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    out = {}
+    for r in data["results"]:
+        suite = r.get("suite")
+        if suite in _KEYS:
+            key = (suite,) + tuple(r[k] for k in _KEYS[suite])
+            out[key] = r
+    return out
+
+
+def check(current: str, baseline: str, tolerance: float) -> list:
+    cur, base = _rows(current), _rows(baseline)
+    failures = []
+    for key, brow in sorted(base.items()):
+        suite = key[0]
+        crow = cur.get(key)
+        tag = "/".join(str(k) for k in key)
+        if crow is None:
+            failures.append(f"{tag}: acceptance row missing from "
+                            f"{current}")
+            continue
+        got, ref = crow["speedup"], brow["speedup"]
+        floor = max(_FLOORS[suite], (1.0 - tolerance) * ref)
+        status = "ok" if got >= floor else "FAIL"
+        print(f"{tag}: {got:.2f}x (baseline {ref:.2f}x, "
+              f"floor {floor:.2f}x) {status}")
+        if got < floor:
+            failures.append(
+                f"{tag}: {got:.2f}x is below floor {floor:.2f}x "
+                f"(baseline {ref:.2f}x, tolerance {tolerance:.0%})")
+        if suite == "jax_backend" and not crow.get("parity", False):
+            failures.append(f"{tag}: jax backend parity bit not set")
+    if not base:
+        failures.append(f"no acceptance rows found in {baseline}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_multi_query.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/"
+                            "BENCH_multi_query.fast.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional regression vs baseline")
+    args = ap.parse_args()
+    failures = check(args.current, args.baseline, args.tolerance)
+    if failures:
+        print("\nbenchmark regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nbenchmark regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

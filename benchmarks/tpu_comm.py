@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.configs.base import get_config, list_archs
 from repro.core.fd import comm_bytes

@@ -41,7 +41,7 @@ for name in available_policies():
 res = engine.run(spec, get_policy("fd-dynamic").variant(
     lifetime_mean_s=60.0))
 print(f"{'+churn':10s} accuracy {res.metrics.accuracy.mean():.2f} "
-      f"(60 s mean lifetime)")
+      "(60 s mean lifetime)")
 
 # ---- 2. the compiled NetworkPlan persists across runs --------------------
 t0 = time.perf_counter()
@@ -53,9 +53,23 @@ cold = time.perf_counter() - t0
 print(f"\nNetworkPlan reuse: cold {cold * 1e3:.1f} ms -> "
       f"warm {warm * 1e3:.1f} ms "
       f"({engine.plan.cache_info()['origin_statics']} origin statics "
-      f"cached)")
+      "cached)")
 
-# ---- 3. device backend: same surface over shard_map collectives ----------
+# ---- 3. jitted backend: same surface, same bits, XLA sweeps --------------
+jit_engine = SimEngine(top, SimParams(seed=0), backend="jax")
+spec_small = QuerySpec(origins=(0,), n_trials=2)
+res_np = engine.run(spec_small)
+res_jx = jit_engine.run(spec_small)          # compiles once per tree
+assert res_jx.backend == "sim-jax"
+assert np.array_equal(res_jx.metrics.response_time_s,
+                      res_np.metrics.response_time_s)   # identical bits
+t0 = time.perf_counter()
+jit_engine.run(spec_small)                   # warm: jit + plan cached
+print(f"\n[jax] backend bit-exact vs numpy ✓  warm run "
+      f"{(time.perf_counter() - t0) * 1e3:.0f} ms "
+      "(churn variants fall back to the numpy sweep transparently)")
+
+# ---- 4. device backend: same surface over shard_map collectives ----------
 import jax
 
 from repro.jaxcompat import make_mesh
@@ -68,7 +82,7 @@ assert np.allclose(np.asarray(res.values), np.asarray(ref_vals),
                    atol=1e-6)
 rows = jax.random.normal(jax.random.PRNGKey(1), (4096, 16))
 got = dev.run(QuerySpec(k=10), "fd-dynamic", scores=scores[0], rows=rows)
-print(f"\n[device] fd == global top-k ✓  retrieved rows "
+print("\n[device] fd == global top-k ✓  retrieved rows "
       f"{np.asarray(got.rows).shape}; "
       f"model bytes fd={res.extras['model_bytes']:,} vs "
       f"cn={dev.run(QuerySpec(k=10), 'cn', scores=scores).extras['model_bytes']:,}")

@@ -9,7 +9,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim.compress import (compress_init, compression_ratio,
                                   fd_sparse_allreduce, inflate_k)

@@ -7,7 +7,6 @@ config (use on real accelerators).
 Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--full]
 """
 import argparse
-import dataclasses
 import sys
 
 

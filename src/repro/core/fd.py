@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +35,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro import jaxcompat
 from repro.core import topology
-from repro.core.scorelist import empty_scorelist
 from repro.kernels.merge import merge_scorelists
 from repro.kernels.topk import local_topk
 

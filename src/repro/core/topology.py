@@ -28,10 +28,10 @@ SCHEDULES = ("halving", "doubling", "ring")
 
 
 def _log2(n: int) -> int:
-    l = int(math.log2(n))
-    if 2 ** l != n:
+    e = int(math.log2(n))
+    if 2 ** e != n:
         raise ValueError(f"axis size {n} must be a power of two")
-    return l
+    return e
 
 
 def doubling_rounds(n: int):

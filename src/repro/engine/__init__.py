@@ -9,8 +9,14 @@ NetworkPlan, across the sim and device backends.
 
     engine.run(QuerySpec(origins=(0, 7)), "cn-star")   # plan reused
 
+    SimEngine(topology, backend="jax")      # jitted XLA sweeps — same
+                                            # bits, 100k-peer scale
+
+``SimEngine(backend="jax")`` lowers the forward and merge sweeps to
+jitted JAX over the plan's cached ``DepthSlices`` (``sim_jax`` is
+imported lazily, so the default numpy path stays JAX-free);
 ``DeviceEngine`` exposes the same surface over the JAX shard_map
-collectives (it is imported lazily — touching it pulls in JAX).
+collectives (also imported lazily).
 """
 from repro.engine.api import (Policy, QuerySpec, TopKResult,  # noqa: F401
                               available_policies, get_policy,

@@ -157,7 +157,7 @@ class TopKResult:
     fd-stats round metrics, the device comm-model bytes, ...
     """
     policy: str
-    backend: str                       # "sim" | "device"
+    backend: str                       # "sim" | "sim-jax" | "device"
     k: int
     metrics: Optional[BatchMetrics] = None
     values: Any = None

@@ -26,6 +26,127 @@ from repro.p2psim.graph import (Topology, as_csr, bfs_tree_csr,
 from repro.p2psim.simulate import _OriginStatic
 
 
+class DepthSlices:
+    """Depth-bucketed dense slices + static merge schedule of one tree.
+
+    Everything the jitted JAX sweep (``repro.engine.sim_jax``) needs to
+    run one origin's simulation as pure gathers/concats — no scatters,
+    no data-dependent shapes.  Each BFS level is one dense slice; the
+    bottom-up k-list merge is precompiled here into a static *fold
+    schedule*: per round, which child-slot pairs merge (``mi_a`` /
+    ``mi_b``), which odd slots carry over (``pi``), and where each
+    parent's finished segment retires (``ret``).  Only real pairwise
+    merges are ever executed on device, so the sweep's work is
+    O(reached + children) k-list merges regardless of degree skew.
+
+    The jit cache keys on the level/round size profile of the tree (and
+    k) — shared across origins whose trees bucket identically and
+    reused verbatim across every ``run`` on the same plan — rather than
+    on raw per-origin node identities, which travel as device-resident
+    index arrays.
+
+    Per depth ``d`` (all indices are *positions*, not node ids):
+      * ``vv`` — the level's nodes (ascending);
+      * ``par_pos`` — each node's parent position inside level d-1;
+      * ``cnode`` — the level's children (= the d+1 reach set) grouped
+        by parent; ``c_in_next`` their positions inside level d+1;
+        ``cpar_pos`` their parents' positions inside this level;
+      * ``par_sel`` / ``leaf_sel`` / ``asm_perm`` — the with-children /
+        leaf split of the level and the permutation reassembling
+        [parents, leaves] into node order;
+      * ``rounds`` / ``ret`` / ``ret_perm`` — the fold schedule.
+    """
+
+    def __init__(self, st: _OriginStatic, n: int):
+        self.n = n
+        self.origin = st.origin
+        self.dmax = len(st.levels) - 1
+        self.levels = []
+        for d in range(self.dmax + 1):
+            vs = st.levels[d]
+            L = len(vs)
+            lv = {"vv": vs.astype(np.int64)}
+            if d > 0:
+                lv["par_pos"] = np.searchsorted(st.levels[d - 1],
+                                                st.parent[vs])
+            if d < self.dmax:
+                ch = st.levels[d + 1]
+                order = np.argsort(st.parent[ch], kind="stable")
+                cnode = ch[order]
+                cpar = st.parent[ch][order]
+                lv["cnode"] = cnode
+                lv["c_in_next"] = np.searchsorted(ch, cnode)
+                lv["cpar_pos"] = np.searchsorted(vs, cpar)
+                par_nodes = np.unique(cpar)          # ascending
+                n_par = len(par_nodes)
+                par_sel = np.searchsorted(vs, par_nodes)
+                leaf_sel = np.setdiff1d(np.arange(L), par_sel)
+                lv["par_sel"], lv["leaf_sel"] = par_sel, leaf_sel
+                lv["asm_perm"] = np.argsort(
+                    np.concatenate([par_sel, leaf_sel]))
+                rounds, ret, segs = self._fold_schedule(
+                    np.searchsorted(par_nodes, cpar))
+                lv["rounds"], lv["ret"] = rounds, ret
+                # concat-of-retirements order -> parent-ascending order
+                lv["ret_perm"] = np.argsort(segs, kind="stable")
+            self.levels.append(lv)
+        if st.fw_strategy == "basic":
+            self.n_els = 0
+            self.els_src = self.els_dst = np.zeros(0, np.int64)
+            self.cond = np.zeros(0, bool)
+        else:
+            self.n_els = len(st.fw_els_src)
+            self.els_src = st.fw_els_src
+            self.els_dst = st.fw_els_dst
+            self.cond = st.fw_cond
+
+    @staticmethod
+    def _fold_schedule(seg_of_slot: np.ndarray):
+        """Static schedule of the segmented pairwise top-k reduction.
+
+        Returns (rounds, ret, segs): ``rounds[r] = (mi_a, mi_b, pi)``
+        index arrays into round r's input array (round 0's input is the
+        parent-grouped child-list array) — pairs to merge plus odd
+        slots carried over, output layout [merged..., carried...];
+        ``ret[r]`` — the slots of round r's array holding a finished
+        segment's full reduction (None when no segment finishes there;
+        round 0 retires single-child parents); ``segs`` — the segment
+        ids in concat-of-retirements order.
+        """
+        slots: dict = {}
+        for i, seg in enumerate(seg_of_slot):
+            slots.setdefault(int(seg), []).append(i)
+        rounds, ret, seg_order = [], [], []
+        while True:
+            done = [(v[0], s) for s, v in sorted(slots.items())
+                    if len(v) == 1]
+            ret.append(np.array([i for i, _ in done])
+                       if done else None)
+            seg_order.extend(s for _, s in done)
+            slots = {s: v for s, v in slots.items() if len(v) > 1}
+            if not slots:
+                break
+            mi_a, mi_b, pi = [], [], []
+            nxt: dict = {}
+            for s in sorted(slots):
+                v = slots[s]
+                for j in range(0, len(v) - 1, 2):
+                    nxt.setdefault(s, []).append(len(mi_a))
+                    mi_a.append(v[j])
+                    mi_b.append(v[j + 1])
+                if len(v) % 2:
+                    pi.append(v[-1])
+            off = len(mi_a)
+            for j, s in enumerate(s for s in sorted(slots)
+                                  if len(slots[s]) % 2):
+                nxt[s].append(off + j)
+            rounds.append((np.array(mi_a), np.array(mi_b),
+                           np.array(pi, np.int64)))
+            slots = nxt
+        return (tuple(rounds), tuple(ret),
+                np.array(seg_order, np.int64))
+
+
 class NetworkPlan:
     """Reusable per-topology state shared by every query on an overlay."""
 
@@ -37,6 +158,15 @@ class NetworkPlan:
         self.degrees = np.diff(self.indptr)
         self._statics: Dict[Tuple[int, int, str], _OriginStatic] = {}
         self._auto_ttl: Dict[int, int] = {}
+        self._slices: Dict[Tuple[int, int, str], DepthSlices] = {}
+
+    def depth_slices(self, st: _OriginStatic) -> DepthSlices:
+        """Padded depth-bucketed arrays for ``st`` (the jitted sweep's
+        inputs), compiled once per (origin, ttl, strategy) and cached."""
+        key = (st.origin, st.ttl, st.fw_strategy)
+        if key not in self._slices:
+            self._slices[key] = DepthSlices(st, self.top.n)
+        return self._slices[key]
 
     def auto_ttl(self, origin: int) -> int:
         """Resolved auto-TTL (BFS eccentricity), computed once per origin
@@ -84,4 +214,5 @@ class NetworkPlan:
 
     def cache_info(self) -> dict:
         return {"origin_statics": len(self._statics),
-                "auto_ttls": len(self._auto_ttl)}
+                "auto_ttls": len(self._auto_ttl),
+                "depth_slices": len(self._slices)}

@@ -17,6 +17,7 @@ by tests/test_engine.py + tests/test_multi_query.py):
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Union
 
 import numpy as np
@@ -41,14 +42,39 @@ def _batch_of_one(met: QueryMetrics) -> BatchMetrics:
 
 
 class SimEngine:
-    """Unified Top-k engine backend over the overlay simulator."""
+    """Unified Top-k engine backend over the overlay simulator.
+
+    ``backend`` selects the sweep implementation:
+
+      * ``"numpy"`` (default) — the vectorized numpy batch engine;
+      * ``"jax"`` — jitted XLA sweeps over the plan's depth-bucketed
+        slices and static merge-fold schedule
+        (``repro.engine.sim_jax``), routing the bottom-up k-list merge
+        through the Pallas bitonic kernel on TPU.
+        Bit-for-bit equal to the numpy backend in every RNG mode
+        (the stochastic inputs are the same numpy draws); churn
+        variants (finite ``lifetime_mean_s``) transparently fall back
+        to the numpy sweep.
+
+    ``use_pallas`` (jax backend only): None = auto (Pallas on TPU, the
+    jnp merge oracle elsewhere); True forces the Pallas kernel, in
+    interpret mode off-TPU.
+    """
 
     backend = "sim"
 
     def __init__(self, top: Optional[Union[Topology, NetworkPlan]] = None,
-                 params: Optional[SimParams] = None):
+                 params: Optional[SimParams] = None, *,
+                 backend: str = "numpy",
+                 use_pallas: Optional[bool] = None):
+        if backend not in ("numpy", "jax"):
+            raise ValueError("backend must be 'numpy' or 'jax', "
+                             f"got {backend!r}")
         self.params = params if params is not None else SimParams()
         self.plan: Optional[NetworkPlan] = None
+        self.backend = "sim" if backend == "numpy" else "sim-jax"
+        self._backend = backend
+        self._use_pallas = use_pallas
         if top is not None:
             self.prepare(top)
 
@@ -90,9 +116,18 @@ class SimEngine:
         sts, st_of_q = self.plan.origin_statics(origins, p.ttl, fw_strategy)
         ent_st = np.repeat(st_of_q, T)
         ent_origin = np.repeat(origins, T)
-        res = _run_entries(sts, ent_st, ent_origin, ent_seeds,
-                           self.plan.top.n, p, pol.algorithm, pol.dynamic,
-                           pol.lifetime_mean_s, spec.independent)
+        if self._backend == "jax" and math.isinf(pol.lifetime_mean_s):
+            from repro.engine.sim_jax import run_entries_jax
+            res = run_entries_jax(self.plan, sts, ent_st, ent_origin,
+                                  ent_seeds, self.plan.top.n, p,
+                                  pol.algorithm, pol.dynamic,
+                                  pol.lifetime_mean_s, spec.independent,
+                                  use_pallas=self._use_pallas)
+        else:
+            res = _run_entries(sts, ent_st, ent_origin, ent_seeds,
+                               self.plan.top.n, p, pol.algorithm,
+                               pol.dynamic, pol.lifetime_mean_s,
+                               spec.independent)
 
         bm = BatchMetrics.empty(pol.algorithm, Q, T)
         n_reached_s = np.array([len(st.idx) for st in sts], np.int64)

@@ -1,0 +1,357 @@
+"""SimEngine ``backend="jax"`` — jitted overlay sweeps at 100k-peer scale.
+
+The numpy engine's two hot phases are lowered to XLA:
+
+  * the per-depth forward-phase sweep — query arrival times down the
+    BFS tree plus the Strategy-1 "who-sent-first" edge reduction;
+  * the bottom-up k-list merge — the static fold schedule compiled into
+    the plan's :class:`~repro.engine.plan.DepthSlices` executes only
+    real pairwise merges (plus odd-slot carries), each one a fused
+    bitonic merge network (max against the reversed partner, then
+    log2(K) compare-exchange stages) — no ``top_k``, no sorts, no
+    scatters, which XLA:CPU punishes by orders of magnitude.  On TPU
+    (or with ``use_pallas=True``) the pairwise step routes through the
+    Pallas bitonic kernel in ``repro.kernels.merge`` instead.
+
+Everything stochastic is precomputed in numpy by the SHARED
+``_precompute_draws`` (same RNG streams, same order as the scalar
+reference), and the retrieval / accuracy epilogue is the shared numpy
+code — so this backend is bit-for-bit equal to the numpy backend in
+every RNG mode, and therefore to ``run_query_reference`` wherever the
+numpy backend is (shared batch of one, independent streams).  The
+sweeps trace and run inside ``jaxcompat.enable_x64()``: float64 is what
+makes "same expression" mean "same bits".
+
+The jit cache keys on the tree's level/round size profile plus
+(n_entries, k) — origin identities travel as device-cached index
+arrays, so repeated runs on a prepared plan never recompile.
+
+Churn (finite ``lifetime_mean_s``) keeps the numpy path: dead-parent
+rerouting is a sparse per-event process the dense sweep has no business
+emulating (``SimEngine`` falls back transparently).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import jaxcompat
+from repro.engine.plan import DepthSlices, NetworkPlan
+from repro.kernels.merge.merge import _next_pow2
+from repro.kernels.merge.ops import merge_scorelists
+from repro.p2psim.metrics import ENTRY_BYTES_PAPER
+from repro.p2psim.simulate import (SimParams, _accept_urgent_origin,
+                                   _cn_entries, _empty_out,
+                                   _precompute_draws, _retrieval_exact,
+                                   _retrieval_shared, _true_topk_by_origin,
+                                   wait_time)
+
+
+def _merge_desc(va, ia, vb, ib):
+    """Fused bitonic merge of two descending K-lists (K a power of two).
+
+    ``max(a_i, reverse(b)_i)`` selects the top-K multiset of the union
+    as a bitonic sequence; log2(K) half-cleaner stages re-sort it
+    descending.  Pure elementwise min/max/select — XLA fuses the whole
+    network into one pass.  Exact for distinct values (and the -inf
+    padding only ever ties with itself beyond the real entries).
+    """
+    K = va.shape[-1]
+    fb = vb[..., ::-1]
+    fo = ib[..., ::-1]
+    take = va >= fb
+    v = jnp.where(take, va, fb)
+    o = jnp.where(take, ia, fo)
+    lane = np.arange(K)
+    s = K // 2
+    while s >= 1:
+        # partner exchange via reshape+reverse (fusible, unlike stack):
+        # lane l swaps with l ^ s inside each 2s block
+        shp = v.shape[:-1] + (K // (2 * s), 2, s)
+        vp = jnp.flip(v.reshape(shp), axis=-2).reshape(v.shape)
+        op = jnp.flip(o.reshape(shp), axis=-2).reshape(o.shape)
+        take_max = jnp.asarray(lane % (2 * s) < s)
+        keep = (v >= vp) == take_max
+        v = jnp.where(keep, v, vp)
+        o = jnp.where(keep, o, op)
+        s //= 2
+    return v, o
+
+
+def _merge_lists(va, ia, vb, ib, use_pallas: bool):
+    """One pairwise descending k-list merge (top-k of the union)."""
+    if use_pallas:
+        return merge_scorelists(
+            va, ia, vb, ib, use_pallas=True,
+            interpret=jax.default_backend() != "tpu")
+    return _merge_desc(va, ia, vb, ib)
+
+
+def _retire(pools, lv):
+    """Gather each finished segment's slot, in parent-ascending order."""
+    parts = [pools[r][:, idx] for r, idx in enumerate(lv["ret"])
+             if idx is not None]
+    return jnp.concatenate(parts, axis=1)[:, lv["ret_perm"]]
+
+
+def _fold_lists(cv, co, lv, use_pallas):
+    """Run the level's static fold schedule over the (masked) child
+    k-lists; returns each parent's merged children top-k, in
+    parent-ascending order."""
+    pools_v, pools_o = [cv], [co]
+    for mi_a, mi_b, pi in lv["rounds"]:
+        mv, mo = _merge_lists(cv[:, mi_a], co[:, mi_a],
+                              cv[:, mi_b], co[:, mi_b], use_pallas)
+        if pi.shape[0]:
+            mv = jnp.concatenate([mv, cv[:, pi]], axis=1)
+            mo = jnp.concatenate([mo, co[:, pi]], axis=1)
+        cv, co = mv, mo
+        pools_v.append(mv)
+        pools_o.append(mo)
+    return _retire(pools_v, lv), _retire(pools_o, lv)
+
+
+def _fold_max(a, lv):
+    """Same schedule, max-reduce: each parent's latest child arrival."""
+    pools = [a]
+    for mi_a, mi_b, pi in lv["rounds"]:
+        ma = jnp.maximum(a[:, mi_a], a[:, mi_b])
+        if pi.shape[0]:
+            ma = jnp.concatenate([ma, a[:, pi]], axis=1)
+        a = ma
+        pools.append(ma)
+    return _retire(pools, lv)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas",
+                                             "with_st1"))
+def _fd_sweep(scores, t_exec, up_term, dn_term, wt, tqf, lam, levels,
+              els, *, k, use_pallas, with_st1):
+    """Forward + merge-and-backward sweeps of one origin's tree.
+
+    Per-level functional form: level d's arrays are produced from level
+    d±1's by static gathers — nothing is scattered into a global
+    buffer.  Bit-parity contract: every float expression groups exactly
+    as the numpy sweep's; k-lists are padded to K = 2^ceil(log2 k) with
+    -inf tails that never surface in the top k.
+    """
+    E = t_exec.shape[0]
+    K = _next_pow2(k)
+    dmax = len(levels) - 1
+
+    skip = None
+    if with_st1:
+        els_src, els_dst, cond = els
+        send_at = tqf[None, :] + lam
+        skip = ((send_at[:, els_dst] < send_at[:, els_src])
+                & cond[None, :]).sum(axis=1)
+
+    t_qs = [jnp.zeros((E, 1))]
+    for d in range(1, dmax + 1):
+        lv = levels[d]
+        t_qs.append(t_qs[d - 1][:, lv["par_pos"]]
+                    + dn_term[:, lv["vv"]])
+
+    send = [None] * (dmax + 1)
+    m_v = [None] * (dmax + 1)
+    m_o = [None] * (dmax + 1)
+    for d in range(dmax, -1, -1):
+        lv = levels[d]
+        vv = lv["vv"]
+        L = vv.shape[0]
+        own_ready = t_qs[d] + t_exec[:, vv]
+        deadline = t_qs[d] + wt[vv][None, :]
+        own_v = scores[:, vv]
+        if K > k:
+            own_v = jnp.concatenate(
+                [own_v, jnp.full((E, L, K - k), -jnp.inf)], axis=2)
+        own_o = jnp.broadcast_to(vv.astype(jnp.int32)[None, :, None],
+                                 (E, L, K))
+        if "cnode" not in lv:                    # all leaves
+            all_in = jnp.zeros((E, L))
+            send[d] = jnp.minimum(
+                jnp.maximum(own_ready, all_in),
+                jnp.maximum(deadline, own_ready))
+            m_v[d], m_o[d] = own_v, own_o
+            continue
+        a0 = send[d + 1][:, lv["c_in_next"]] + up_term[:, lv["cnode"]]
+        # the parent's send time (needed for the on-time mask) depends
+        # on all_in, a pure max over ALL child arrivals — mask-free,
+        # exactly as numpy computes it
+        n_par = lv["ret_perm"].shape[0]
+        all_in = jnp.concatenate(
+            [_fold_max(a0, lv), jnp.zeros((E, L - n_par))],
+            axis=1)[:, lv["asm_perm"]]
+        s = jnp.minimum(jnp.maximum(own_ready, all_in),
+                        jnp.maximum(deadline, own_ready))
+        send[d] = s
+        ont = a0 <= s[:, lv["cpar_pos"]]
+        cv0 = jnp.where(ont[..., None],
+                        m_v[d + 1][:, lv["c_in_next"]], -jnp.inf)
+        co0 = m_o[d + 1][:, lv["c_in_next"]]
+        child_v, child_o = _fold_lists(cv0, co0, lv, use_pallas)
+        pv, po = _merge_lists(own_v[:, lv["par_sel"]],
+                              own_o[:, lv["par_sel"]],
+                              child_v, child_o, use_pallas)
+        m_v[d] = jnp.concatenate(
+            [pv, own_v[:, lv["leaf_sel"]]], axis=1)[:, lv["asm_perm"]]
+        m_o[d] = jnp.concatenate(
+            [po, own_o[:, lv["leaf_sel"]]], axis=1)[:, lv["asm_perm"]]
+    return (tuple(send), tuple(v[:, :, :k] for v in m_v),
+            tuple(o[:, :, :k] for o in m_o), skip)
+
+
+@jax.jit
+def _cn_sweep(t_exec, dn_term, levels):
+    """CN / CN* need only the arrival sweep: t_exec_done per level."""
+    E = t_exec.shape[0]
+    t_qs = [jnp.zeros((E, 1))]
+    for d in range(1, len(levels)):
+        lv = levels[d]
+        t_qs.append(t_qs[d - 1][:, lv["par_pos"]]
+                    + dn_term[:, lv["vv"]])
+    return tuple(tq + t_exec[:, lv["vv"]]
+                 for tq, lv in zip(t_qs, levels))
+
+
+def _device_slices(sl: DepthSlices):
+    """DepthSlices as cached device arrays (one transfer per plan)."""
+    cached = getattr(sl, "_device", None)
+    if cached is None:
+        def conv(f, v):
+            if f == "rounds":
+                return tuple(tuple(jnp.asarray(x) for x in rnd)
+                             for rnd in v)
+            if f == "ret":
+                return tuple(None if idx is None else jnp.asarray(idx)
+                             for idx in v)
+            return jnp.asarray(v)
+        levels = tuple({f: conv(f, v) for f, v in lv.items()}
+                       for lv in sl.levels)
+        els = (jnp.asarray(sl.els_src), jnp.asarray(sl.els_dst),
+               jnp.asarray(sl.cond))
+        cached = sl._device = (levels, els)
+    return cached
+
+
+def _sub(a: np.ndarray, es: np.ndarray, E: int) -> np.ndarray:
+    return a if len(es) == E else a[es]
+
+
+def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
+                    ent_origin: np.ndarray, seeds, n: int, p: SimParams,
+                    algorithm: str, dynamic: bool, lifetime_mean_s: float,
+                    independent: bool,
+                    use_pallas: Optional[bool] = None) -> dict:
+    """Drop-in for the numpy ``_run_entries`` with jitted sweeps.
+
+    Same contract, same outputs, same bits — see the module docstring.
+    Requires an infinite-lifetime (no-churn) policy; ``SimEngine``
+    routes churn variants to the numpy path.
+    """
+    if not math.isinf(lifetime_mean_s):
+        raise ValueError("the jax backend is churn-free; SimEngine falls "
+                         "back to the numpy sweep for finite lifetimes")
+    E = len(seeds)
+    S = len(sts)
+    k = p.k
+    list_bytes = k * ENTRY_BYTES_PAPER
+    ent_of_st = [np.flatnonzero(ent_st == s) for s in range(S)]
+    draws = _precompute_draws(ent_origin, seeds, n, p, algorithm,
+                              sts[0].fw_strategy, lifetime_mean_s,
+                              independent)
+    out = _empty_out(E)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    # ---- CN / CN*: arrival sweep on device, baseline math shared --------
+    if algorithm in ("cn", "cn_star"):
+        out["m_fw"][:] = np.array([st.m_basic for st in sts],
+                                  np.int64)[ent_st]
+        t_ex_done = np.full((E, n), np.inf)
+        with jaxcompat.enable_x64():
+            for s, st in enumerate(sts):
+                es = ent_of_st[s]
+                sl = plan.depth_slices(st)
+                levels, _ = _device_slices(sl)
+                ted = _cn_sweep(_sub(draws.t_exec, es, E),
+                                _sub(draws.dn_term, es, E), levels)
+                for d, lv in enumerate(sl.levels):
+                    t_ex_done[np.ix_(es, lv["vv"])] = np.asarray(ted[d])
+        _cn_entries(out, draws, sts, ent_st, ent_origin, t_ex_done, p,
+                    algorithm)
+        return out
+
+    # ---- FD: jitted forward + merge sweeps per origin -------------------
+    send_t = np.full((E, n), np.inf)
+    mvals = np.empty((E, n, k))
+    mown = np.full((E, n, k), -1, np.int32)
+    with jaxcompat.enable_x64():
+        for s, st in enumerate(sts):
+            es = ent_of_st[s]
+            sl = plan.depth_slices(st)
+            levels, els = _device_slices(sl)
+            with_st1 = st.fw_strategy != "basic"
+            tqf = lam = np.zeros(0)
+            if with_st1:
+                tqf = np.where(st.depth >= 0, st.depth * p.t_qsnd_s,
+                               np.inf)
+                lam = _sub(draws.lam, es, E)
+            send_d, mv_d, mo_d, skip = _fd_sweep(
+                _sub(draws.scores, es, E), _sub(draws.t_exec, es, E),
+                _sub(draws.up_term, es, E), _sub(draws.dn_term, es, E),
+                wait_time(st.ttl_rem, p), tqf, lam, levels, els,
+                k=k, use_pallas=bool(use_pallas), with_st1=with_st1)
+            for d, lv in enumerate(sl.levels):
+                rows = np.ix_(es, lv["vv"])
+                send_t[rows] = np.asarray(send_d[d])
+                mvals[rows] = np.asarray(mv_d[d])
+                mown[rows] = np.asarray(mo_d[d])
+            out["m_fw"][es] = (st.fw_static + sl.n_els
+                               - np.asarray(skip, np.int64)
+                               if with_st1 else st.m_basic)
+
+    # no churn: every reached non-origin peer sends exactly once
+    n_reached_arr = np.array([len(st.idx) for st in sts], np.int64)
+    out["m_bw"] += n_reached_arr[ent_st] - 1
+    out["b_bw"] += (n_reached_arr[ent_st] - 1) * list_bytes
+
+    # ---- urgent lists (§4.1): late-arrival post-pass --------------------
+    urgent: list = [[] for _ in range(E)]
+    if dynamic:
+        hop_term = p.latency_mean_s + list_bytes / p.bw_mean_Bps
+        for s, st in enumerate(sts):
+            es = ent_of_st[s]
+            ch = st.kid_sorted
+            if len(ch) == 0:
+                continue
+            pr = st.parent[ch]
+            a = send_t[np.ix_(es, ch)] + draws.up_term[np.ix_(es, ch)]
+            late = a > send_t[np.ix_(es, pr)]
+            if not late.any():
+                continue
+            d_par = st.depth[pr]
+            ei, ci = np.nonzero(late)
+            etas = a[ei, ci] + d_par[ci] * hop_term
+            for e_, c_, eta in zip(es[ei], ch[ci], etas):
+                urgent[int(e_)].append((eta, int(c_)))
+            out["m_bw"][es] += (late * d_par[None, :]).sum(axis=1)
+            out["b_bw"][es] += (late
+                                * (d_par[None, :] * list_bytes)).sum(axis=1)
+
+    top_true_all = _true_topk_by_origin(draws.scores, sts, ent_of_st, k)
+    t_merge_done = send_t[np.arange(E), ent_origin] + p.merge_s
+    _accept_urgent_origin(urgent, ent_origin, t_merge_done, mvals, mown,
+                          None, k)
+    if draws.exact:
+        _retrieval_exact(out, draws, ent_origin, t_merge_done, mvals,
+                         mown, top_true_all, p)
+    else:
+        _retrieval_shared(out, draws, ent_origin, t_merge_done, mvals,
+                          mown, top_true_all, p)
+    return out

@@ -20,7 +20,10 @@ Mapping (new → old):
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+import jax.experimental  # noqa: F401  (feature-probed in enable_x64)
 
 _NEW_SHARD_MAP = hasattr(jax, "shard_map")
 _HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
@@ -100,6 +103,30 @@ def mesh_axis_names(auto_only: bool = False) -> tuple:
         auto = jax.sharding.AxisType.Auto
         return tuple(n for n, t in zip(names, m.axis_types) if t == auto)
     return tuple(n for n in names if not _axis_is_bound(n))
+
+
+def enable_x64():
+    """Context manager scoping float64 tracing to the enclosed block.
+
+    ``jax.experimental.enable_x64`` where it exists (the whole 0.4–0.7
+    line today), else a set/restore of the global flag.  The jitted
+    simulator sweeps (``repro.engine.sim_jax``) trace AND call inside
+    this context so their float64 parity contract never leaks the x64
+    default into the rest of the process (kernels, device tests and the
+    model stack all run the JAX-default float32).
+    """
+    if hasattr(jax.experimental, "enable_x64"):
+        return jax.experimental.enable_x64()
+
+    @contextlib.contextmanager
+    def _scoped():
+        old = bool(jax.config.jax_enable_x64)
+        jax.config.update("jax_enable_x64", True)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", old)
+    return _scoped()
 
 
 def pallas_tpu_compiler_params(**kwargs):

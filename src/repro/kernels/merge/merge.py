@@ -16,7 +16,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro import jaxcompat
 
@@ -73,10 +72,10 @@ def _lane_swap(x, stride: int, m: int):
 
 
 def _merge_kernel(va_ref, ia_ref, vb_ref, ib_ref, vo_ref, io_ref, *,
-                  k: int, m: int):
-    va = va_ref[...].astype(jnp.float32)
+                  k: int, m: int, dt):
+    va = va_ref[...].astype(dt)
     ia = ia_ref[...]
-    vb = vb_ref[...].astype(jnp.float32)
+    vb = vb_ref[...].astype(dt)
     ib = ib_ref[...]
     pad = m // 2 - k
     if pad:
@@ -93,22 +92,27 @@ def _merge_kernel(va_ref, ia_ref, vb_ref, ib_ref, vo_ref, io_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def merge_pallas(vals_a, idx_a, vals_b, idx_b, *, interpret: bool = True):
-    """Merge two descending k-lists -> top-k of the union (descending)."""
+    """Merge two descending k-lists -> top-k of the union (descending).
+
+    float64 inputs (the x64 simulator sweep, interpret mode) merge in
+    float64; anything narrower keeps the float32 compute dtype.
+    """
     lead = vals_a.shape[:-1]
     k = vals_a.shape[-1]
     m = 2 * _next_pow2(k)
+    dt = jnp.promote_types(jnp.result_type(vals_a, vals_b), jnp.float32)
     va = vals_a.reshape((-1, k))
     b = va.shape[0]
     args = [va, idx_a.reshape((-1, k)), vals_b.reshape((-1, k)),
             idx_b.reshape((-1, k))]
-    kern = functools.partial(_merge_kernel, k=k, m=m)
+    kern = functools.partial(_merge_kernel, k=k, m=m, dt=dt)
     spec = pl.BlockSpec((1, k), lambda i: (i, 0))
     vo, io = pl.pallas_call(
         kern,
         grid=(b,),
         in_specs=[spec] * 4,
         out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.float32),
+        out_shape=[jax.ShapeDtypeStruct((b, k), dt),
                    jax.ShapeDtypeStruct((b, k), jnp.int32)],
         compiler_params=jaxcompat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel",)),

@@ -17,7 +17,10 @@ def merge_ref(vals_a, idx_a, vals_b, idx_b, k: int | None = None):
     """
     if k is None:
         k = vals_a.shape[-1]
-    v = jnp.concatenate([vals_a, vals_b], axis=-1).astype(jnp.float32)
+    # float64 lists (the x64 simulator sweep) merge in float64; anything
+    # narrower keeps the historical float32 compute dtype
+    dt = jnp.promote_types(jnp.result_type(vals_a, vals_b), jnp.float32)
+    v = jnp.concatenate([vals_a, vals_b], axis=-1).astype(dt)
     i = jnp.concatenate([idx_a, idx_b], axis=-1)
     mv, pos = jax.lax.top_k(v, k)
     mi = jnp.take_along_axis(i, pos, axis=-1)

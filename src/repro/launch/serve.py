@@ -25,7 +25,6 @@ from repro.data.pipeline import extra_model_inputs
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models import attention as A
-from repro.models import transformer as T
 from repro.optim.sharding import batch_axes, param_specs
 from repro.runtime.steps import make_serve_step
 

@@ -14,7 +14,6 @@ import functools
 import time
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import jaxcompat

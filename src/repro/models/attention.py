@@ -81,7 +81,7 @@ def flash_attention(q, k, v, *, causal: bool, window: int = 0,
             # checkpointed: backward recomputes s/p per block instead of
             # saving the (B,Hkv,G,Bq,Bk) probabilities — this is what makes
             # the pure-JAX flash actually O(S) memory under autodiff.
-            m, l, acc = carry
+            m, lse, acc = carry
             ki, vi, k_idx = args2              # (B,Hkv,Bk,Dq), (B,Hkv,Bk,Dv)
             k_pos = k_idx * kv_block + jnp.arange(kv_block)
             s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
@@ -97,17 +97,17 @@ def flash_attention(q, k, v, *, causal: bool, window: int = 0,
             # fully-masked blocks: s == new_m == NEG_INF -> exp(0); zero them
             p = p * mask[None, None, None]
             corr = jnp.exp(m - new_m)
-            l2 = l * corr + jnp.sum(p, axis=-1)
+            lse2 = lse * corr + jnp.sum(p, axis=-1)
             acc2 = acc * corr[..., None] + jnp.einsum(
                 "bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32))
-            return (new_m, l2, acc2), None
+            return (new_m, lse2, acc2), None
 
         m0 = jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
         a0 = jnp.zeros((b, hkv, g, q_block, dv), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lse, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
-        return acc / jnp.maximum(l, 1e-30)[..., None]
+        return acc / jnp.maximum(lse, 1e-30)[..., None]
 
     out = jax.lax.map(per_q_block, (qb, jnp.arange(nq)))
     # (nq, B, Hkv, G, Bq, Dv) -> (B, Sq, Hq, Dv)

@@ -42,10 +42,10 @@ def griffin_init(key, cfg, dtype):
 
 def _block_diag(x, w):
     """x: (B,S,L) @ block-diagonal w: (nb, bs, bs) -> (B,S,L)."""
-    b, s, l = x.shape
+    b, s, d = x.shape
     nb = w.shape[0]
-    xr = x.reshape(b, s, nb, l // nb)
-    return jnp.einsum("bsnl,nlm->bsnm", xr, w).reshape(b, s, l)
+    xr = x.reshape(b, s, nb, d // nb)
+    return jnp.einsum("bsnl,nlm->bsnm", xr, w).reshape(b, s, d)
 
 
 def rglru(x, a_gate, i_gate, lam, h0):

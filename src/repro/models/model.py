@@ -16,8 +16,7 @@ slots plus (3, B, S) M-RoPE position streams.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -50,7 +50,8 @@ def rwkv6_chunked(r, k, v, w, u, s0, chunk: int = 16):
     c = min(chunk, t)
     pad = (-t) % c
     if pad:
-        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        def zp(a):
+            return jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
         r, k, v = zp(r), zp(k), zp(v)
         w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
     n = (t + pad) // c

@@ -7,7 +7,7 @@ Caches follow the same (groups-stacked, remainder-list) structure.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ with the parameter pytree.  Scanned stacks (``groups``) get a leading
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -13,7 +13,7 @@ bridging components (Waxman).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

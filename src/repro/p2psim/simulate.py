@@ -507,6 +507,105 @@ def _local_topk_scores_batch_fast(n_tuples: np.ndarray, u: np.ndarray,
     return np.exp(out, out=out)
 
 
+@dataclasses.dataclass
+class EntryDraws:
+    """Every per-entry RNG draw, in ``run_query_reference``'s exact order.
+
+    Factored out of the numpy sweep so EVERY SimEngine backend consumes
+    the same numpy-drawn arrays — backends may lower the sweeps to
+    different hardware (see ``repro.engine.sim_jax``), but the
+    stochastic inputs are bit-for-bit identical, which is what makes
+    cross-backend parity a pure statement about the sweep math.
+
+    ``rngs`` is left positioned exactly after the last pre-retrieval
+    draw, so the exact retrieval path can continue each entry's stream
+    where the scalar reference would.
+    """
+    exact: bool
+    rngs: list                            # per-entry generators (or [g]*E)
+    n_tuples: np.ndarray                  # (E, n) int
+    scores: np.ndarray                    # (E, n, k) descending
+    t_exec: np.ndarray                    # (E, n)
+    up_term: np.ndarray                   # (E, n) lat + L_k / bw, v->parent
+    dn_term: np.ndarray                   # (E, n) lat + Q / bw,  parent->v
+    death: np.ndarray                     # (E, n); inf without churn
+    item_sizes: Optional[np.ndarray]      # (E, n, k); None on fd fast path
+    lam: Optional[np.ndarray]             # (E, n) st1/st1+2 random wait
+    lat_o: Optional[np.ndarray]           # (E, n) cn/cn* originator links
+    bw_o: Optional[np.ndarray]
+
+
+def _precompute_draws(ent_origin: np.ndarray, seeds, n: int, p: SimParams,
+                      algorithm: str, fw_strategy: str,
+                      lifetime_mean_s: float,
+                      independent: bool) -> EntryDraws:
+    """All pre-retrieval draws for a flattened (E,) entry batch.
+
+    The order is ``run_query_reference``'s: n_tuples, score uniforms,
+    upward link, downward link, churn deaths, item sizes, then the
+    per-algorithm extras (cn originator links / st1 wait lambdas).
+    """
+    E = len(seeds)
+    k = p.k
+    list_bytes = k * ENTRY_BYTES_PAPER
+    if independent:
+        rngs = [np.random.default_rng(s) for s in seeds]
+        n_tuples = np.stack([r.integers(p.tuples_lo, p.tuples_hi + 1, n)
+                             for r in rngs])
+        u = np.stack([r.random((n, k)) for r in rngs])
+    else:
+        g = np.random.default_rng(int(seeds[0]))
+        rngs = [g] * E
+        n_tuples = g.integers(p.tuples_lo, p.tuples_hi + 1, (E, n))
+        u = g.random((E, n, k))
+    exact = independent or E == 1
+    scores = (_local_topk_scores_batch(n_tuples, u, k) if exact
+              else _local_topk_scores_batch_fast(n_tuples, u, k))
+    t_exec = n_tuples * p.exec_s_per_tuple
+    if independent:
+        lat_up, bw_up = _draw_link_batch(rngs, p, n)
+        lat_dn, bw_dn = _draw_link_batch(rngs, p, n)
+    else:
+        lat_up, bw_up = _draw_link(g, p, (E, n))
+        lat_dn, bw_dn = _draw_link(g, p, (E, n))
+    if math.isinf(lifetime_mean_s):
+        death = np.full((E, n), np.inf)
+    else:
+        if independent:
+            death = np.stack([r.exponential(lifetime_mean_s, n)
+                              for r in rngs])
+        else:
+            death = g.exponential(lifetime_mean_s, (E, n))
+        death[np.arange(E), ent_origin] = np.inf
+    # FD never reads the item-size values — only their stream position
+    # matters, and only for entry-wise parity (independent / E == 1)
+    item_sizes = None
+    if algorithm != "fd" or exact:
+        if independent:
+            item_sizes = np.stack([np.maximum(
+                r.normal(p.item_mean_B, p.item_std_B, (n, k)), 64.0)
+                for r in rngs])
+        else:
+            item_sizes = np.maximum(
+                g.normal(p.item_mean_B, p.item_std_B, (E, n, k)), 64.0)
+    lam = lat_o = bw_o = None
+    if algorithm in ("cn", "cn_star"):
+        if independent:
+            lat_o, bw_o = _draw_link_batch(rngs, p, n)
+        else:
+            lat_o, bw_o = _draw_link(g, p, (E, n))
+    elif fw_strategy != "basic":
+        if independent:
+            lam = np.stack([r.random(n) for r in rngs]) * p.lam_max_s
+        else:
+            lam = g.random((E, n)) * p.lam_max_s
+    return EntryDraws(
+        exact=exact, rngs=rngs, n_tuples=n_tuples, scores=scores,
+        t_exec=t_exec, up_term=lat_up + list_bytes / bw_up,
+        dn_term=lat_dn + QUERY_BYTES / bw_dn, death=death,
+        item_sizes=item_sizes, lam=lam, lat_o=lat_o, bw_o=bw_o)
+
+
 class _OriginStatic:
     """Trial-independent per-origin state (shared by all trials)."""
 
@@ -610,27 +709,11 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     list_bytes = k * ENTRY_BYTES_PAPER
     ent_of_st = [np.flatnonzero(ent_st == s) for s in range(S)]
 
-    # ---- RNG draws, run_query's exact order -----------------------------
-    if independent:
-        rngs = [np.random.default_rng(s) for s in seeds]
-        n_tuples = np.stack([r.integers(p.tuples_lo, p.tuples_hi + 1, n)
-                             for r in rngs])
-        u = np.stack([r.random((n, k)) for r in rngs])
-    else:
-        g = np.random.default_rng(int(seeds[0]))
-        rngs = [g] * E
-        n_tuples = g.integers(p.tuples_lo, p.tuples_hi + 1, (E, n))
-        u = g.random((E, n, k))
-    exact = independent or E == 1
-    scores = (_local_topk_scores_batch(n_tuples, u, k) if exact
-              else _local_topk_scores_batch_fast(n_tuples, u, k))
-    t_exec = n_tuples * p.exec_s_per_tuple
-    if independent:
-        lat_up, bw_up = _draw_link_batch(rngs, p, n)
-        lat_dn, bw_dn = _draw_link_batch(rngs, p, n)
-    else:
-        lat_up, bw_up = _draw_link(g, p, (E, n))
-        lat_dn, bw_dn = _draw_link(g, p, (E, n))
+    # ---- RNG draws, run_query's exact order (shared by all backends) ----
+    draws = _precompute_draws(ent_origin, seeds, n, p, algorithm,
+                              sts[0].fw_strategy, lifetime_mean_s,
+                              independent)
+    scores, t_exec, death = draws.scores, draws.t_exec, draws.death
 
     # ---- level row sets: (entry, node, parent, kid-slice) per depth -----
     kid_concat = (np.concatenate([st.kid_sorted for st in sts])
@@ -677,7 +760,7 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     # ---- query arrival down the tree ------------------------------------
     t_q = np.full((E, n), np.inf)
     t_q[np.arange(E), ent_origin] = 0.0
-    dn_term = lat_dn + QUERY_BYTES / bw_dn       # same float grouping as
+    dn_term = draws.dn_term                      # same float grouping as
     for d in range(1, dmax + 1):                 # _link_time per element
         ee, vv, pp, _, _ = rows[d]
         if len(ee) == 0:
@@ -685,82 +768,21 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
         t_q[ee, vv] = t_q[ee, pp] + dn_term[ee, vv]
     t_ex_done = t_q + t_exec
 
-    # ---- churn ----------------------------------------------------------
-    if math.isinf(lifetime_mean_s):
-        death = np.full((E, n), np.inf)
-    else:
-        if independent:
-            death = np.stack([r.exponential(lifetime_mean_s, n)
-                              for r in rngs])
-        else:
-            death = g.exponential(lifetime_mean_s, (E, n))
-        death[np.arange(E), ent_origin] = np.inf
-
-    # FD never reads the item-size values — only their stream position
-    # matters, and only for entry-wise parity (independent / E == 1)
-    need_items = algorithm != "fd" or exact
-    if need_items:
-        if independent:
-            item_sizes = np.stack([np.maximum(
-                r.normal(p.item_mean_B, p.item_std_B, (n, k)), 64.0)
-                for r in rngs])
-        else:
-            item_sizes = np.maximum(
-                g.normal(p.item_mean_B, p.item_std_B, (E, n, k)), 64.0)
-
-    out = {f: np.zeros(E, np.int64)
-           for f in ("m_fw", "m_bw", "m_rt", "b_bw", "b_rt")}
-    out["response_time_s"] = np.zeros(E)
-    out["accuracy"] = np.zeros(E)
+    out = _empty_out(E)
     m_basic_arr = np.array([st.m_basic for st in sts], np.int64)
 
     # ---- CN / CN* baselines --------------------------------------------
     if algorithm in ("cn", "cn_star"):
-        if independent:
-            lat_o, bw_o = _draw_link_batch(rngs, p, n)
-        else:
-            lat_o, bw_o = _draw_link(g, p, (E, n))
         out["m_fw"][:] = m_basic_arr[ent_st]
-        for e in range(E):
-            idx = sts[ent_st[e]].idx
-            origin = int(ent_origin[e])
-            per_peer = (item_sizes[e][:, :k].sum(1) if algorithm == "cn"
-                        else np.full(n, float(list_bytes)))
-            alive = death[e] > t_ex_done[e]
-            senders = idx[alive[idx]]
-            senders = senders[senders != origin]
-            out["m_bw"][e] = len(senders)
-            out["b_bw"][e] = int(per_peer[senders].sum())
-            own_bw = max(p.bw_mean_Bps, 1.0)
-            t_arrive = t_ex_done[e][senders] + lat_o[e][senders]
-            t_resp = (np.max(t_arrive) if len(senders) else 0.0) \
-                + per_peer[senders].sum() / own_bw
-            if algorithm == "cn_star":
-                true_full = np.full((n, k), -np.inf)
-                true_full[idx] = scores[e][idx]
-                flat = true_full.reshape(-1)
-                top_idx = np.argpartition(flat, -k)[-k:]
-                owners = np.unique(top_idx // k)
-                out["m_rt"][e] = 2 * len(owners)
-                out["b_rt"][e] = int(
-                    out["m_rt"][e] / 2 * p.request_B
-                    + item_sizes[e].reshape(-1)[top_idx].sum())
-                t_resp += 2 * p.latency_mean_s + out["b_rt"][e] / own_bw
-            out["response_time_s"][e] = float(t_resp)
-            delivered = np.zeros(n, bool)
-            delivered[senders] = True
-            delivered[origin] = True
-            out["accuracy"][e] = _accuracy(scores[e], idx, delivered, k)
+        _cn_entries(out, draws, sts, ent_st, ent_origin, t_ex_done, p,
+                    algorithm)
         return out
 
     # ---- FD: forward phase ----------------------------------------------
     if sts[0].fw_strategy == "basic":
         out["m_fw"][:] = m_basic_arr[ent_st]
     else:
-        if independent:
-            lam = np.stack([r.random(n) for r in rngs]) * p.lam_max_s
-        else:
-            lam = g.random((E, n)) * p.lam_max_s
+        lam = draws.lam
         tqf = np.stack([np.where(st.depth >= 0, st.depth * p.t_qsnd_s,
                                  np.inf) for st in sts])
         send_at = tqf[ent_st] + lam                          # (E, n)
@@ -786,7 +808,7 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     urgent: list = [[] for _ in range(E)]      # per entry: (eta, peer)
     m_bw = out["m_bw"]
     b_bw = out["b_bw"]
-    up_term = lat_up + list_bytes / bw_up      # arrival link time per node
+    up_term = draws.up_term                    # arrival link time per node
     no_churn = math.isinf(lifetime_mean_s)
     if no_churn:
         # every reached non-origin peer is alive and sends exactly once;
@@ -902,57 +924,142 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
                 mvals[e_, v_], mown[e_, v_] = _topk_remerge(
                     mvals[e_, v_], mown[e_, v_], ev, eo, k)
 
-    # ---- true top-k of each reach set, grouped by origin ----------------
+    top_true_all = _true_topk_by_origin(scores, sts, ent_of_st, k)
+    t_merge_done = send_t[np.arange(E), ent_origin] + p.merge_s
+    _accept_urgent_origin(urgent, ent_origin, t_merge_done, mvals, mown,
+                          None if no_churn else valid, k)
+    if draws.exact:
+        _retrieval_exact(out, draws, ent_origin, t_merge_done, mvals,
+                         mown, top_true_all, p)
+    else:
+        _retrieval_shared(out, draws, ent_origin, t_merge_done, mvals,
+                          mown, top_true_all, p)
+    return out
+
+
+def _empty_out(E: int) -> dict:
+    out = {f: np.zeros(E, np.int64)
+           for f in ("m_fw", "m_bw", "m_rt", "b_bw", "b_rt")}
+    out["response_time_s"] = np.zeros(E)
+    out["accuracy"] = np.zeros(E)
+    return out
+
+
+def _cn_entries(out: dict, draws: EntryDraws, sts, ent_st: np.ndarray,
+                ent_origin: np.ndarray, t_ex_done: np.ndarray,
+                p: SimParams, algorithm: str) -> None:
+    """CN / CN* baselines given arrival times (backend-shared)."""
+    E = len(ent_st)
+    k = p.k
+    n = t_ex_done.shape[1]
+    list_bytes = k * ENTRY_BYTES_PAPER
+    scores, death = draws.scores, draws.death
+    item_sizes, lat_o = draws.item_sizes, draws.lat_o
+    for e in range(E):
+        idx = sts[ent_st[e]].idx
+        origin = int(ent_origin[e])
+        per_peer = (item_sizes[e][:, :k].sum(1) if algorithm == "cn"
+                    else np.full(n, float(list_bytes)))
+        alive = death[e] > t_ex_done[e]
+        senders = idx[alive[idx]]
+        senders = senders[senders != origin]
+        out["m_bw"][e] = len(senders)
+        out["b_bw"][e] = int(per_peer[senders].sum())
+        own_bw = max(p.bw_mean_Bps, 1.0)
+        t_arrive = t_ex_done[e][senders] + lat_o[e][senders]
+        t_resp = (np.max(t_arrive) if len(senders) else 0.0) \
+            + per_peer[senders].sum() / own_bw
+        if algorithm == "cn_star":
+            true_full = np.full((n, k), -np.inf)
+            true_full[idx] = scores[e][idx]
+            flat = true_full.reshape(-1)
+            top_idx = np.argpartition(flat, -k)[-k:]
+            owners = np.unique(top_idx // k)
+            out["m_rt"][e] = 2 * len(owners)
+            out["b_rt"][e] = int(
+                out["m_rt"][e] / 2 * p.request_B
+                + item_sizes[e].reshape(-1)[top_idx].sum())
+            t_resp += 2 * p.latency_mean_s + out["b_rt"][e] / own_bw
+        out["response_time_s"][e] = float(t_resp)
+        delivered = np.zeros(n, bool)
+        delivered[senders] = True
+        delivered[origin] = True
+        out["accuracy"][e] = _accuracy(scores[e], idx, delivered, k)
+
+
+def _true_topk_by_origin(scores: np.ndarray, sts, ent_of_st,
+                         k: int) -> np.ndarray:
+    """(E, k) true top-k of each entry's reach set, grouped by origin."""
+    E = scores.shape[0]
     top_true_all = np.empty((E, k))
     for s, st in enumerate(sts):
         es = ent_of_st[s]
         block = scores[np.ix_(es, st.idx)].reshape(len(es), -1)
         part = np.partition(block, -k, axis=1)[:, -k:]
         top_true_all[es] = np.sort(part, axis=1)[:, ::-1]
+    return top_true_all
 
-    # ---- origin: accept urgent lists ------------------------------------
-    t_merge_done = send_t[np.arange(E), ent_origin] + p.merge_s
-    for e in range(E):
+
+def _accept_urgent_origin(urgent, ent_origin: np.ndarray,
+                          t_merge_done: np.ndarray, mvals: np.ndarray,
+                          mown: np.ndarray, valid: Optional[np.ndarray],
+                          k: int) -> None:
+    """Fold urgent lists arriving before retrieval into the origin's
+    merge (``valid`` is None when churn is off — everyone is alive)."""
+    for e in range(len(ent_origin)):
         if not urgent[e]:
             continue
         origin = int(ent_origin[e])
         ok = [c for (eta, c) in urgent[e]
-              if eta <= t_merge_done[e] and (no_churn or valid[e, c])]
-        if ok and (no_churn or valid[e, origin]):
+              if eta <= t_merge_done[e]
+              and (valid is None or valid[e, c])]
+        if ok and (valid is None or valid[e, origin]):
             mvals[e, origin], mown[e, origin] = _topk_remerge(
                 mvals[e, origin], mown[e, origin],
                 [mvals[e, c] for c in ok], [mown[e, c] for c in ok], k)
 
-    # ---- data retrieval + accuracy --------------------------------------
-    if exact:
-        # run_query's per-entry code, verbatim (bit-for-bit parity)
-        for e in range(E):
-            origin = int(ent_origin[e])
-            final_owners = np.unique(mown[e, origin])
-            alive_own = death[e, final_owners] > t_merge_done[e]
-            out["m_rt"][e] = 2 * int(alive_own.sum())
-            lat_o, bw_o = _draw_link(rngs[e], p, len(final_owners))
-            per_owner_counts = np.array(
-                [(mown[e, origin] == o).sum() for o in final_owners])
-            fetch_bytes = per_owner_counts * p.item_mean_B
-            out["b_rt"][e] = int(out["m_rt"][e] / 2 * p.request_B
-                                 + fetch_bytes[alive_own].sum())
-            t_fetch = (2 * lat_o + (p.request_B + fetch_bytes) / bw_o)
-            t_fetch = t_fetch[alive_own]
-            out["response_time_s"][e] = float(
-                t_merge_done[e] + (t_fetch.max() if len(t_fetch) else 0.0))
 
-            got = mvals[e, origin]              # sorted descending
-            inter = np.intersect1d(top_true_all[e], got).size
-            dead_owned = np.isin(mown[e, origin], final_owners[~alive_own])
-            inter = max(0, inter - int(np.isin(
-                mvals[e, origin][dead_owned], top_true_all[e]).sum()))
-            out["accuracy"][e] = inter / k
-        return out
+def _retrieval_exact(out: dict, draws: EntryDraws, ent_origin: np.ndarray,
+                     t_merge_done: np.ndarray, mvals: np.ndarray,
+                     mown: np.ndarray, top_true_all: np.ndarray,
+                     p: SimParams) -> None:
+    """run_query's per-entry retrieval, verbatim (bit-for-bit parity)."""
+    k = p.k
+    death, rngs = draws.death, draws.rngs
+    for e in range(len(ent_origin)):
+        origin = int(ent_origin[e])
+        final_owners = np.unique(mown[e, origin])
+        alive_own = death[e, final_owners] > t_merge_done[e]
+        out["m_rt"][e] = 2 * int(alive_own.sum())
+        lat_o, bw_o = _draw_link(rngs[e], p, len(final_owners))
+        per_owner_counts = np.array(
+            [(mown[e, origin] == o).sum() for o in final_owners])
+        fetch_bytes = per_owner_counts * p.item_mean_B
+        out["b_rt"][e] = int(out["m_rt"][e] / 2 * p.request_B
+                             + fetch_bytes[alive_own].sum())
+        t_fetch = (2 * lat_o + (p.request_B + fetch_bytes) / bw_o)
+        t_fetch = t_fetch[alive_own]
+        out["response_time_s"][e] = float(
+            t_merge_done[e] + (t_fetch.max() if len(t_fetch) else 0.0))
 
-    # shared-stream fast path: the same retrieval model, vectorized over
-    # all entries at once (draw assignment to owners differs but is
-    # i.i.d. — distributionally identical to the scalar path)
+        got = mvals[e, origin]              # sorted descending
+        inter = np.intersect1d(top_true_all[e], got).size
+        dead_owned = np.isin(mown[e, origin], final_owners[~alive_own])
+        inter = max(0, inter - int(np.isin(
+            mvals[e, origin][dead_owned], top_true_all[e]).sum()))
+        out["accuracy"][e] = inter / k
+
+
+def _retrieval_shared(out: dict, draws: EntryDraws,
+                      ent_origin: np.ndarray, t_merge_done: np.ndarray,
+                      mvals: np.ndarray, mown: np.ndarray,
+                      top_true_all: np.ndarray, p: SimParams) -> None:
+    """Shared-stream fast path: the same retrieval model, vectorized over
+    all entries at once (draw assignment to owners differs but is
+    i.i.d. — distributionally identical to the scalar path)."""
+    E = len(ent_origin)
+    k = p.k
+    death = draws.death
     ar = np.arange(E)
     mo = mown[ar, ent_origin]                                # (E, k)
     gv = mvals[ar, ent_origin]                               # (E, k)
@@ -968,7 +1075,7 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     fetch_total = alive_elem.sum(axis=1) * p.item_mean_B
     out["b_rt"][:] = (alive_owner_cnt * p.request_B
                       + fetch_total).astype(np.int64)
-    lat_o, bw_o = _draw_link(g, p, (E, k))       # one draw per owner slot
+    lat_o, bw_o = _draw_link(draws.rngs[0], p, (E, k))   # per owner slot
     t_f = 2 * lat_o + (p.request_B + count_elem * p.item_mean_B) / bw_o
     t_max = np.where(firstocc & alive_elem, t_f, -np.inf).max(axis=1)
     out["response_time_s"][:] = t_merge_done + np.where(
@@ -978,7 +1085,6 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     inter = match.sum(axis=1)
     corr = (match & ~alive_elem).sum(axis=1)
     out["accuracy"][:] = np.maximum(0, inter - corr) / k
-    return out
 
 
 def run_queries(top: Topology, origins,

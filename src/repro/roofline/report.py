@@ -42,7 +42,7 @@ def dryrun_table(recs, mesh: str):
     skipped = [r for r in recs if r.get("mesh") == mesh and r.get("skipped")]
     for r in skipped:
         rows.append(f"| {r['arch']} | {r['shape']} | — | skipped "
-                    f"(structural) | | | | |")
+                    "(structural) | | | | |")
     return "\n".join(rows)
 
 

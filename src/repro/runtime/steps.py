@@ -11,8 +11,6 @@ in_shardings/out_shardings (see launch/dryrun.py and launch/train.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,11 +62,11 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
 
             def body(carry, mb):
                 g_acc, l_acc = carry
-                (l, _), g = jax.value_and_grad(
+                (mb_loss, _), g = jax.value_and_grad(
                     loss_of, has_aux=True)(params, mb)
                 g_acc = constrain_acc(jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g))
-                return (g_acc, l_acc + l), None
+                return (g_acc, l_acc + mb_loss), None
 
             g0 = constrain_acc(jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params))

@@ -2,8 +2,6 @@
 (512 fake host devices, subprocess) and produces coherent roofline
 artifacts.  The full 64-cell sweep runs via the CLI; this guards the
 machinery in CI time."""
-import json
-
 import pytest
 
 from conftest import run_with_devices

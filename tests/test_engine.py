@@ -107,6 +107,104 @@ def test_spec_k_and_explicit_seeds_override():
 
 
 # --------------------------------------------------------------------------
+# SimEngine(backend="jax"): jitted sweeps, same bits (ISSUE 3)
+# --------------------------------------------------------------------------
+
+JTOP = barabasi_albert(96, m=2, seed=3)      # small: keeps jit compiles fast
+_PARITY_FIELDS = ("n_reached", "n_edges_pq", "m_fw", "m_bw", "m_rt",
+                  "b_fw", "b_bw", "b_rt", "response_time_s", "accuracy")
+
+
+def _assert_metrics_equal(a, b, msg):
+    for f in _PARITY_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{msg}: {f}")
+
+
+@pytest.mark.parametrize("name", STANDARD)
+def test_jax_backend_bit_exact_all_policies(name):
+    """backend="jax" == numpy backend in EVERY rng mode (same draws, same
+    sweep results bit-for-bit), and == the scalar reference wherever the
+    numpy backend is (shared batch of one, independent streams)."""
+    pol = get_policy(name)
+    en = SimEngine(JTOP, PA)
+    ej = SimEngine(JTOP, PA, backend="jax")
+    assert ej.backend == "sim-jax"
+    # shared batch of one == scalar reference
+    met, _ = run_query_reference(JTOP, 5, SimParams(seed=2),
+                                 **_legacy_kwargs(pol))
+    res = ej.run(QuerySpec(origins=(5,), seed=2), name)
+    assert res.backend == "sim-jax" and res.query_metrics(0, 0) == met
+    # independent streams: entry-wise reference parity
+    spec = QuerySpec(origins=(0, 7, 7), n_trials=2, rng="independent")
+    rj = ej.run(spec, name)
+    for q, o in enumerate((0, 7, 7)):
+        for t in range(2):
+            met, _ = run_query_reference(
+                JTOP, o, dataclasses.replace(PA, seed=PA.seed + q * 2 + t),
+                **_legacy_kwargs(pol))
+            assert rj.query_metrics(q, t) == met, (name, q, t)
+    # shared stream, batch > 1: full cross-backend equality
+    spec = QuerySpec(origins=(1, 8), n_trials=3)
+    _assert_metrics_equal(ej.run(spec, name).metrics,
+                          en.run(spec, name).metrics, name)
+
+
+def test_jax_backend_pallas_kernel_path():
+    """use_pallas=True routes every pairwise merge through the Pallas
+    bitonic kernel (interpret mode off-TPU) — same bits as the default
+    fused-jnp network and the numpy backend."""
+    pa = SimParams(seed=4, k=8)
+    spec = QuerySpec(origins=(0, 3), n_trials=2)
+    rn = SimEngine(JTOP, pa).run(spec, "fd-dynamic")
+    rp = SimEngine(JTOP, pa, backend="jax", use_pallas=True).run(
+        spec, "fd-dynamic")
+    _assert_metrics_equal(rp.metrics, rn.metrics, "pallas")
+
+
+def test_jax_backend_churn_falls_back_and_stats_run():
+    ej = SimEngine(JTOP, PA, backend="jax")
+    en = SimEngine(JTOP, PA)
+    pol = get_policy("fd-dynamic").variant(lifetime_mean_s=30.0)
+    assert (ej.run(QuerySpec(origins=(0,)), pol).query_metrics(0, 0)
+            == en.run(QuerySpec(origins=(0,)), pol).query_metrics(0, 0))
+    rs = ej.run(QuerySpec(origins=(0,)), "fd-stats")
+    rn = en.run(QuerySpec(origins=(0,)), "fd-stats")
+    assert rs.extras["metrics_full"] == rn.extras["metrics_full"]
+    assert rs.extras["accuracy"] == rn.extras["accuracy"]
+
+
+def test_jax_backend_nonpow2_k_and_explicit_seeds():
+    seeds = np.array([[11, 22], [33, 44]])
+    spec = QuerySpec(origins=(0, 9), n_trials=2, k=7, seeds=seeds)
+    res = SimEngine(JTOP, PA, backend="jax").run(spec, "fd-st1+2")
+    for q, o in enumerate((0, 9)):
+        for t in range(2):
+            met, _ = run_query_reference(
+                JTOP, o,
+                dataclasses.replace(PA, k=7, seed=int(seeds[q, t])),
+                strategy="st1+2", dynamic=False)
+            assert res.query_metrics(q, t) == met
+
+
+def test_jax_backend_validation_and_plan_sharing():
+    with pytest.raises(ValueError):
+        SimEngine(JTOP, backend="cuda")
+    plan = NetworkPlan(JTOP)
+    en = SimEngine(plan, PA)
+    ej = SimEngine(plan, PA, backend="jax")
+    spec = QuerySpec(origins=(2,))
+    _assert_metrics_equal(ej.run(spec).metrics, en.run(spec).metrics,
+                          "shared plan")
+    assert ej.plan is en.plan is plan
+    # the depth slices are compiled once and cached on the shared plan
+    assert plan.cache_info()["depth_slices"] >= 1
+    n_slices = plan.cache_info()["depth_slices"]
+    ej.run(spec)
+    assert plan.cache_info()["depth_slices"] == n_slices
+
+
+# --------------------------------------------------------------------------
 # fd-stats policy (two-round statistics heuristic)
 # --------------------------------------------------------------------------
 

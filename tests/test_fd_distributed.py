@@ -1,6 +1,5 @@
 """FD distributed top-k vs CN / CN* and the global oracle — on 8 fake
 devices in a subprocess (tests in-process must see 1 device)."""
-import pytest
 
 
 def test_fd_all_schedules_and_baselines(devices8):

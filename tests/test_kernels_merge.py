@@ -1,6 +1,5 @@
 """Score-list merge kernel (bitonic, Merge-and-Backward) vs oracle."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -62,3 +61,27 @@ def test_merge_associative(k, seed):
     l1 = merge_pallas(*merge_pallas(va, ia, vb, ib), vc, ic)
     l2 = merge_pallas(va, ia, *merge_pallas(vb, ib, vc, ic))
     np.testing.assert_allclose(np.asarray(l1[0]), np.asarray(l2[0]))
+
+
+def test_merge_float64_passthrough():
+    """float64 lists (the x64 simulator sweep) merge in float64 on both
+    the Pallas kernel and the jnp oracle — no silent f32 downcast."""
+    from repro import jaxcompat
+    with jaxcompat.enable_x64():
+        rng = np.random.default_rng(0)
+        va = np.sort(rng.random((4, 8)))[:, ::-1].copy()
+        vb = np.sort(rng.random((4, 8)))[:, ::-1].copy()
+        ia = rng.integers(0, 99, (4, 8)).astype(np.int32)
+        ib = rng.integers(0, 99, (4, 8)).astype(np.int32)
+        v1, i1 = merge_pallas(va, ia, vb, ib)
+        v2, i2 = merge_ref(va, ia, vb, ib)
+        assert v1.dtype == v2.dtype == np.float64
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        # exact top-k of the union, descending, in full precision
+        both = np.concatenate([va, vb], axis=1)
+        np.testing.assert_array_equal(
+            np.asarray(v1), np.sort(both, axis=1)[:, ::-1][:, :8])
+    # f32 inputs keep the historical f32 compute dtype
+    v3, _ = merge_ref(va.astype(np.float32), ia, vb.astype(np.float32), ib)
+    assert v3.dtype == np.float32

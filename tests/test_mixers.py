@@ -129,13 +129,13 @@ def test_rwkv_state_carry_split():
 # --------------------------------------------------------------------------
 
 def test_rglru_assoc_vs_sequential():
-    b, s, l = 2, 33, 16
+    b, s, dim = 2, 33, 16
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (b, s, l))
-    a_g = jax.random.normal(jax.random.PRNGKey(1), (b, s, l))
-    i_g = jax.random.normal(jax.random.PRNGKey(2), (b, s, l))
-    lam = jnp.linspace(0.1, 2.0, l)
-    h0 = jax.random.normal(jax.random.PRNGKey(3), (b, l))
+    x = jax.random.normal(key, (b, s, dim))
+    a_g = jax.random.normal(jax.random.PRNGKey(1), (b, s, dim))
+    i_g = jax.random.normal(jax.random.PRNGKey(2), (b, s, dim))
+    lam = jnp.linspace(0.1, 2.0, dim)
+    h0 = jax.random.normal(jax.random.PRNGKey(3), (b, dim))
     h, h_last = rglru(x, a_g, i_g, lam, h0)
     # sequential oracle
     r = jax.nn.sigmoid(a_g)

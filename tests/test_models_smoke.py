@@ -1,7 +1,6 @@
 """Per-architecture smoke tests (assignment requirement): reduced
 same-family config, one forward/train step on CPU, output shapes + no
 NaNs; plus a decode step."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Paper-faithful reproduction checks: Lemmas 1–4, Theorem 1, §3.2 byte
 model, §5 figures' trends (scaled down for CI speed)."""
-import math
 
 import numpy as np
 import pytest
@@ -142,3 +141,67 @@ def test_ttl_coverage():
     assert ttl <= 12
     _, depth, reached = bfs_tree(TOP, 0, ttl)
     assert reached.all()
+
+
+# --------------------------------------------------------------------------
+# topology edge cases (ISSUE 3): adversarial Waxman corners + auto-TTL
+# agreement between the NetworkPlan and the scalar bfs_tree path
+# --------------------------------------------------------------------------
+
+def _is_connected(top):
+    _, _, reached = bfs_tree(top, 0, top.n)
+    return bool(reached.all())
+
+
+@pytest.mark.parametrize("alpha,beta", [
+    (0.01, 0.9),    # near-zero decay length: edges only between twins
+    (0.01, 0.01),   # ... and almost no edges at all
+    (5.0, 1e-4),    # flat decay but vanishing base probability
+    (5.0, 0.999),   # dense regime
+    (1e-4, 1e-4),   # both corners at once
+])
+def test_waxman_adversarial_corners_connected(alpha, beta):
+    """Post-connection bridging must yield ONE component for (alpha,
+    beta) corners where the raw Waxman draw is wildly under- or
+    over-connected."""
+    for seed in (0, 1):
+        top = waxman(60, alpha=alpha, beta=beta, seed=seed)
+        assert top.n == 60
+        assert _is_connected(top), (alpha, beta, seed)
+        # bridging adds edges, never nodes or duplicate arcs
+        for u in range(top.n):
+            nb = top.neighbors[u]
+            assert len(np.unique(nb)) == len(nb)
+            assert u not in nb
+
+
+def test_waxman_corner_still_simulates():
+    """A bridged near-empty Waxman graph (long chains) must survive a
+    full query simulation with auto TTL."""
+    top = waxman(40, alpha=0.01, beta=0.01, seed=5)
+    met, _ = run_query(top, 0, SimParams(seed=1, k=5))
+    assert met.n_reached == 40
+    assert met.accuracy == 1.0
+
+
+def test_auto_ttl_plan_vs_scalar_agreement():
+    """NetworkPlan.auto_ttl / origin_statics resolve ttl=0 to the SAME
+    eccentricity as the scalar bfs path, on both generators."""
+    from repro.engine import NetworkPlan
+    for top in (barabasi_albert(80, m=2, seed=2),
+                waxman(50, alpha=0.05, beta=0.08, seed=4),
+                waxman(30, alpha=0.01, beta=0.01, seed=0)):
+        plan = NetworkPlan(top)
+        for origin in (0, top.n // 2, top.n - 1):
+            ecc = eccentricity_ttl(top, origin)
+            assert plan.auto_ttl(origin) == ecc, (top.kind, origin)
+        # origin_statics' ttl resolution agrees with auto_ttl and the
+        # cached value is shared between both entry points
+        sts, _ = plan.origin_statics(
+            np.array([0, top.n - 1]), 0, "st1+2")
+        assert sts[0].ttl == plan.auto_ttl(0)
+        assert sts[1].ttl == plan.auto_ttl(top.n - 1)
+        # a fresh plan resolving via origin_statics first also matches
+        plan2 = NetworkPlan(top)
+        sts2, _ = plan2.origin_statics(np.array([0]), 0, "st1+2")
+        assert plan2.auto_ttl(0) == sts2[0].ttl == eccentricity_ttl(top, 0)

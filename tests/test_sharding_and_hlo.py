@@ -2,9 +2,7 @@
 HLO analyzer calibration, topology schedules, and elastic resharding."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_config, list_archs
 from repro.core import topology

@@ -11,7 +11,7 @@ import pytest
 from repro.ckpt.checkpoint import CheckpointManager, latest_step, restore, save
 from repro.data.pipeline import SyntheticLM
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_lr
-from repro.optim.compress import compress_init, inflate_k, topk_sparsify
+from repro.optim.compress import topk_sparsify
 from repro.runtime.ft import (FailureInjector, StragglerTimeout,
                               StragglerWatchdog, run_with_recovery)
 
