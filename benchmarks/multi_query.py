@@ -32,6 +32,10 @@ writes ``BENCH_multi_query.json``:
        "n_queries": int, "n_trials": int, "jax_s": float,
        "numpy_s": float, "reference_s": float, "speedup": float,
        "vs_batch_numpy": float, "parity": bool},
+      {"suite": "jax_churn", "n_peers": int, "k": int,
+       "lifetime_s": float, "n_queries": int, "n_trials": int,
+       "jax_s": float, "numpy_s": float, "reference_s": float,
+       "speedup": float, "vs_batch_numpy": float, "parity": bool},
       {"suite": "tpu", "schedule": str, "k": int, "n_dev": int,
        "n_local": int, "model_bytes": int, "measured_bytes": int,
        "wall_us_per_call": float}
@@ -194,6 +198,64 @@ def jax_backend_bench(fast: bool = False):
              "vs_batch_numpy": numpy_s / jax_s, "parity": parity}]
 
 
+def jax_churn_bench(fast: bool = False):
+    """SimEngine(backend="jax") under churn (§4/§5.4) at overlay scale.
+
+    The acceptance measurement of the churn-aware jitted sweep: the
+    scenarios the paper cares most about — peers leaving mid-query,
+    urgent forwarding, dead-parent rerouting — across several lifetime
+    regimes (heavy churn where a meaningful fraction of peers dies
+    before sending, and light churn where deaths are rare but the
+    masked/reroute-augmented sweep still runs).  Per regime the same
+    independent-streams workload runs through the jitted engine, the
+    vectorized numpy backend, and a scalar ``run_query_reference``
+    loop; entry-wise bit-parity with the reference is ASSERTED at full
+    scale, as is the absence of any numpy fallback
+    (``backend_used == "sim-jax"``).
+    """
+    n_peers = 20_000 if fast else 100_000
+    nq, nt = 2, 2
+    lifetimes = (60.0, 600.0)
+    top = barabasi_albert(n_peers, m=2, seed=7)
+    p = SimParams(seed=5)
+    spec = QuerySpec(origins=(0, 1), n_trials=nt, seed=5,
+                     rng="independent")
+    eng_np = SimEngine(top, p)
+    eng_jx = SimEngine(top, p, backend="jax")
+    reps = 2 if fast else 3
+    results = []
+    for lt in lifetimes:
+        pol = get_policy("fd-dynamic").variant(lifetime_mean_s=lt)
+        eng_np.run(spec, pol)             # warm plans + jit caches
+        eng_jx.run(spec, pol)
+        numpy_s = min(_timed(lambda: eng_np.run(spec, pol))
+                      for _ in range(reps))
+        jax_s = min(_timed(lambda: eng_jx.run(spec, pol))
+                    for _ in range(reps))
+        res = eng_jx.run(spec, pol)
+        assert res.backend_used == "sim-jax", "churn fell back to numpy"
+        t0 = time.perf_counter()
+        parity = True
+        for q in range(nq):
+            for t in range(nt):
+                met, _ = run_query_reference(
+                    top, q,
+                    dataclasses.replace(p, seed=p.seed + q * nt + t),
+                    lifetime_mean_s=lt)
+                parity = parity and res.query_metrics(q, t) == met
+        reference_s = time.perf_counter() - t0
+        assert parity, ("jax churn backend diverged from "
+                        f"run_query_reference (lifetime {lt})")
+        results.append({
+            "suite": "jax_churn", "n_peers": n_peers, "k": p.k,
+            "lifetime_s": lt, "n_queries": nq, "n_trials": nt,
+            "jax_s": jax_s, "numpy_s": numpy_s,
+            "reference_s": reference_s,
+            "speedup": reference_s / jax_s,
+            "vs_batch_numpy": numpy_s / jax_s, "parity": parity})
+    return results
+
+
 def tpu_sweep(fast: bool = False):
     import jax
     from repro.core.fd import comm_bytes, fd_topk
@@ -243,7 +305,7 @@ def collect(fast: bool = False) -> dict:
                  "jax": jax.__version__, "numpy": np.__version__},
         "results": (sim_sweep(fast) + speedup_bench(fast)
                     + plan_cache_bench(fast) + jax_backend_bench(fast)
-                    + tpu_sweep(fast)),
+                    + jax_churn_bench(fast) + tpu_sweep(fast)),
     }
 
 
@@ -273,6 +335,11 @@ def suite_rows():
             rows.append((f"multi_query/jax_backend/n={r['n_peers']}"
                          "/vs_batch_numpy", r["vs_batch_numpy"],
                          "jitted engine vs vectorized numpy backend"))
+        elif r["suite"] == "jax_churn":
+            rows.append((f"multi_query/jax_churn/n={r['n_peers']}"
+                         f"/lt={r['lifetime_s']:g}/speedup", r["speedup"],
+                         "jitted churn sweep vs scalar reference; "
+                         "acceptance: >= 3x"))
         else:
             rows.append((f"multi_query/tpu/{r['schedule']}/k={r['k']}"
                          "/bytes", r["model_bytes"],
@@ -296,12 +363,15 @@ def main() -> None:
     sp = [r for r in data["results"] if r["suite"] == "speedup"][0]
     pc = [r for r in data["results"] if r["suite"] == "plan_cache"][0]
     jx = [r for r in data["results"] if r["suite"] == "jax_backend"][0]
+    ch = [r for r in data["results"] if r["suite"] == "jax_churn"]
+    churn = "; ".join(f"lt={r['lifetime_s']:g}s {r['speedup']:.1f}x"
+                      for r in ch)
     print(f"wrote {args.out}: {len(data['results'])} results; "
           f"speedup_vs_loop={sp['speedup']:.1f}x; "
           f"plan_cache warm/cold={pc['speedup']:.2f}x; "
           f"jax_backend {jx['speedup']:.1f}x vs reference "
           f"({jx['vs_batch_numpy']:.2f}x vs batch numpy, "
-          f"n={jx['n_peers']})")
+          f"n={jx['n_peers']}); jax_churn {churn}")
 
 
 if __name__ == "__main__":

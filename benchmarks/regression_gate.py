@@ -5,7 +5,9 @@ committed baseline and fails when any acceptance-row speedup
 
   * ``speedup``      — batched engine vs scalar-reference loop (PR 1),
   * ``plan_cache``   — warm NetworkPlan vs cold rebuild (ISSUE 2),
-  * ``jax_backend``  — jitted JAX engine vs scalar reference (ISSUE 3)
+  * ``jax_backend``  — jitted JAX engine vs scalar reference (ISSUE 3),
+  * ``jax_churn``    — jitted churn sweep vs scalar reference, per
+    lifetime regime (ISSUE 4)
 
 drops by more than ``--tolerance`` (default 20%) below the baseline's,
 or violates its absolute acceptance floor:
@@ -14,6 +16,12 @@ or violates its absolute acceptance floor:
   * ``plan_cache``  >  1x    (warm plan must beat cold)
   * ``jax_backend`` >= 3x    vs the scalar reference, with the
     entry-wise ``parity`` bit set (bit-exactness asserted at scale)
+  * ``jax_churn``   >= 3x    vs the scalar reference in EVERY lifetime
+    regime, parity bit required — churn-path perf regressions (or a
+    silent return to the numpy fallback) fail the workflow; the
+    relative band is widened to 40% for these rows (see
+    ``_SUITE_TOLERANCE``) because their ratio noise on small CI
+    runners exceeds the default 20%
 
 Rows are matched on (suite + identity params); a baseline acceptance
 row with no matching current row is itself a failure, so suites cannot
@@ -34,8 +42,17 @@ _KEYS = {
     "speedup": ("n_peers", "n_queries", "n_trials"),
     "plan_cache": ("n_peers", "n_queries", "n_trials", "n_policies"),
     "jax_backend": ("n_peers", "k", "n_queries", "n_trials"),
+    "jax_churn": ("n_peers", "k", "lifetime_s", "n_queries", "n_trials"),
 }
-_FLOORS = {"speedup": 10.0, "plan_cache": 1.0, "jax_backend": 3.0}
+_FLOORS = {"speedup": 10.0, "plan_cache": 1.0, "jax_backend": 3.0,
+           "jax_churn": 3.0}
+_PARITY_SUITES = ("jax_backend", "jax_churn")
+# per-suite minimum tolerance: the churn rows divide two wall-clock
+# measurements whose run-to-run swing on 2-core CI runners exceeds the
+# default 20% band (observed 6.1x-8.5x for the same build), so the
+# relative check uses a wider band there; the absolute 3x floor and the
+# parity bit still gate every run
+_SUITE_TOLERANCE = {"jax_churn": 0.40}
 
 
 def _rows(path: str) -> dict:
@@ -62,15 +79,16 @@ def check(current: str, baseline: str, tolerance: float) -> list:
                             f"{current}")
             continue
         got, ref = crow["speedup"], brow["speedup"]
-        floor = max(_FLOORS[suite], (1.0 - tolerance) * ref)
+        tol = max(tolerance, _SUITE_TOLERANCE.get(suite, 0.0))
+        floor = max(_FLOORS[suite], (1.0 - tol) * ref)
         status = "ok" if got >= floor else "FAIL"
         print(f"{tag}: {got:.2f}x (baseline {ref:.2f}x, "
               f"floor {floor:.2f}x) {status}")
         if got < floor:
             failures.append(
                 f"{tag}: {got:.2f}x is below floor {floor:.2f}x "
-                f"(baseline {ref:.2f}x, tolerance {tolerance:.0%})")
-        if suite == "jax_backend" and not crow.get("parity", False):
+                f"(baseline {ref:.2f}x, tolerance {tol:.0%})")
+        if suite in _PARITY_SUITES and not crow.get("parity", False):
             failures.append(f"{tag}: jax backend parity bit not set")
     if not base:
         failures.append(f"no acceptance rows found in {baseline}")

@@ -66,8 +66,20 @@ assert np.array_equal(res_jx.metrics.response_time_s,
 t0 = time.perf_counter()
 jit_engine.run(spec_small)                   # warm: jit + plan cached
 print(f"\n[jax] backend bit-exact vs numpy ✓  warm run "
-      f"{(time.perf_counter() - t0) * 1e3:.0f} ms "
-      "(churn variants fall back to the numpy sweep transparently)")
+      f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
+
+# churn runs IN the jitted sweep too — deaths, urgent lists and §4.2
+# dead-parent rerouting are validity masks over the plan's static
+# reroute tables, so a volatile overlay costs no numpy fallback
+churn_pol = get_policy("fd-dynamic").variant(lifetime_mean_s=60.0)
+res_cj = jit_engine.run(spec_small, churn_pol)
+res_cn = engine.run(spec_small, churn_pol)
+assert res_cj.backend_used == "sim-jax"      # no silent fallback
+assert np.array_equal(res_cj.metrics.accuracy, res_cn.metrics.accuracy)
+print(f"[jax] churn (60 s lifetimes) in-XLA ✓  accuracy "
+      f"{res_cj.metrics.accuracy.mean():.2f} vs "
+      f"{res_jx.metrics.accuracy.mean():.2f} static "
+      f"(backend_used={res_cj.backend_used})")
 
 # ---- 4. device backend: same surface over shard_map collectives ----------
 import jax

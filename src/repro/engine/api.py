@@ -155,15 +155,27 @@ class TopKResult:
     device backend fills ``values`` / ``indices`` (and ``rows`` on the
     data-retrieval gather path).  ``extras`` carries backend specifics:
     fd-stats round metrics, the device comm-model bytes, ...
+
+    ``backend`` names the engine the caller constructed;
+    ``backend_used`` records the path that actually executed (defaults
+    to ``backend``).  They differ only when an engine falls back — e.g.
+    ``fd-stats`` on ``SimEngine(backend="jax")`` runs the numpy
+    reference rounds — so tests can assert no SILENT fallback:
+    ``assert res.backend_used == res.backend``.
     """
     policy: str
     backend: str                       # "sim" | "sim-jax" | "device"
     k: int
+    backend_used: Optional[str] = None
     metrics: Optional[BatchMetrics] = None
     values: Any = None
     indices: Any = None
     rows: Any = None
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.backend_used is None:
+            self.backend_used = self.backend
 
     def query_metrics(self, q: int = 0, t: int = 0) -> QueryMetrics:
         """Scalar per-query metrics (sim backend only)."""

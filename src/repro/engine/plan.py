@@ -55,11 +55,30 @@ class DepthSlices:
         leaf split of the level and the permutation reassembling
         [parents, leaves] into node order;
       * ``rounds`` / ``ret`` / ``ret_perm`` — the fold schedule.
+
+    With ``reroute=True`` (the churn sweep's §4.2 dead-parent rerouting)
+    each level that has grandchildren additionally carries a STATIC
+    reroute candidate table: every level-d+2 node is a potential urgent
+    contributor to its grandparent at level d whenever its own parent
+    died, so the fold schedule is recompiled over the augmented slot set
+    [children..., grandchildren...]:
+
+      * ``rr_gc_pos`` — grandchild positions inside level d+2;
+      * ``rr_gc_par_pos`` — their parents' positions inside level d+1
+        (the liveness gather: a grandchild slot is live iff that parent
+        is DEAD);
+      * ``rr_rounds`` / ``rr_ret`` / ``rr_ret_perm`` — the augmented
+        fold schedule (grandchild slots segment to their grandparent).
+
+    Which slots actually contribute is decided per entry by validity
+    masks at run time — the shapes, gathers, and merge schedule stay
+    fixed, so rerouting never leaves XLA.
     """
 
-    def __init__(self, st: _OriginStatic, n: int):
+    def __init__(self, st: _OriginStatic, n: int, reroute: bool = False):
         self.n = n
         self.origin = st.origin
+        self.reroute = False
         self.dmax = len(st.levels) - 1
         self.levels = []
         for d in range(self.dmax + 1):
@@ -99,6 +118,36 @@ class DepthSlices:
             self.els_src = st.fw_els_src
             self.els_dst = st.fw_els_dst
             self.cond = st.fw_cond
+        if reroute:
+            self.extend_reroute(st)
+
+    def extend_reroute(self, st: _OriginStatic) -> None:
+        """Add the reroute tables to THIS instance, in place.
+
+        Level d's grandchildren are level d+1's children, re-segmented
+        by grandparent (always one of level d's parents: a grandchild's
+        grandparent has the dead child as a child by construction).
+        Everything already compiled is shared — the churn sweep extends
+        the cached slices instead of duplicating them, and the base
+        device arrays (plus any jitted static-sweep traces over them)
+        stay valid: the rr tables travel as a SEPARATE device-cached
+        pytree (see ``sim_jax._device_slices``).
+        """
+        if self.reroute:
+            return
+        for d in range(self.dmax - 1):
+            lv, nxt = self.levels[d], self.levels[d + 1]
+            par_nodes = lv["vv"][lv["par_sel"]]
+            gp = st.parent[st.parent[nxt["cnode"]]]
+            lv["rr_gc_pos"] = nxt["c_in_next"]
+            lv["rr_gc_par_pos"] = nxt["cpar_pos"]
+            seg = np.concatenate([
+                np.searchsorted(par_nodes, st.parent[lv["cnode"]]),
+                np.searchsorted(par_nodes, gp)])
+            rounds, ret, segs = self._fold_schedule(seg)
+            lv["rr_rounds"], lv["rr_ret"] = rounds, ret
+            lv["rr_ret_perm"] = np.argsort(segs, kind="stable")
+        self.reroute = True
 
     @staticmethod
     def _fold_schedule(seg_of_slot: np.ndarray):
@@ -160,13 +209,21 @@ class NetworkPlan:
         self._auto_ttl: Dict[int, int] = {}
         self._slices: Dict[Tuple[int, int, str], DepthSlices] = {}
 
-    def depth_slices(self, st: _OriginStatic) -> DepthSlices:
+    def depth_slices(self, st: _OriginStatic,
+                     reroute: bool = False) -> DepthSlices:
         """Padded depth-bucketed arrays for ``st`` (the jitted sweep's
-        inputs), compiled once per (origin, ttl, strategy) and cached."""
+        inputs), compiled once per (origin, ttl, strategy) and cached.
+        ``reroute=True`` lazily EXTENDS the cached instance with the
+        static §4.2 dead-parent reroute tables the churn sweep folds
+        over — the base arrays are never duplicated."""
         key = (st.origin, st.ttl, st.fw_strategy)
-        if key not in self._slices:
-            self._slices[key] = DepthSlices(st, self.top.n)
-        return self._slices[key]
+        sl = self._slices.get(key)
+        if sl is None:
+            sl = self._slices[key] = DepthSlices(st, self.top.n,
+                                                 reroute=reroute)
+        elif reroute:
+            sl.extend_reroute(st)
+        return sl
 
     def auto_ttl(self, origin: int) -> int:
         """Resolved auto-TTL (BFS eccentricity), computed once per origin

@@ -17,7 +17,7 @@ by tests/test_engine.py + tests/test_multi_query.py):
 from __future__ import annotations
 
 import dataclasses
-import math
+import warnings
 from typing import Optional, Union
 
 import numpy as np
@@ -52,9 +52,13 @@ class SimEngine:
         (``repro.engine.sim_jax``), routing the bottom-up k-list merge
         through the Pallas bitonic kernel on TPU.
         Bit-for-bit equal to the numpy backend in every RNG mode
-        (the stochastic inputs are the same numpy draws); churn
-        variants (finite ``lifetime_mean_s``) transparently fall back
-        to the numpy sweep.
+        (the stochastic inputs are the same numpy draws), INCLUDING
+        churn: finite ``lifetime_mean_s`` runs in the same jitted
+        sweep via validity masks and the plan's static reroute tables
+        — no numpy fallback.  The only policy that still executes on
+        the numpy reference path is the two-round ``fd-stats``
+        heuristic; that fallback is recorded on
+        ``TopKResult.backend_used`` and warned about once per engine.
 
     ``use_pallas`` (jax backend only): None = auto (Pallas on TPU, the
     jnp merge oracle elsewhere); True forces the Pallas kernel, in
@@ -75,8 +79,19 @@ class SimEngine:
         self.backend = "sim" if backend == "numpy" else "sim-jax"
         self._backend = backend
         self._use_pallas = use_pallas
+        self._warned_fallback = False
         if top is not None:
             self.prepare(top)
+
+    def _fallback(self, reason: str) -> str:
+        """Record a numpy-path fallback; warn AT MOST ONCE per engine."""
+        if self._backend == "jax" and not self._warned_fallback:
+            self._warned_fallback = True
+            warnings.warn(
+                f"SimEngine(backend='jax'): {reason}; running on the "
+                "numpy reference path (reported on "
+                "TopKResult.backend_used)", RuntimeWarning, stacklevel=4)
+        return "sim"
 
     def prepare(self, top: Union[Topology, NetworkPlan]) -> NetworkPlan:
         """Compile (or adopt) the overlay's NetworkPlan."""
@@ -116,18 +131,20 @@ class SimEngine:
         sts, st_of_q = self.plan.origin_statics(origins, p.ttl, fw_strategy)
         ent_st = np.repeat(st_of_q, T)
         ent_origin = np.repeat(origins, T)
-        if self._backend == "jax" and math.isinf(pol.lifetime_mean_s):
+        if self._backend == "jax":
             from repro.engine.sim_jax import run_entries_jax
             res = run_entries_jax(self.plan, sts, ent_st, ent_origin,
                                   ent_seeds, self.plan.top.n, p,
                                   pol.algorithm, pol.dynamic,
                                   pol.lifetime_mean_s, spec.independent,
                                   use_pallas=self._use_pallas)
+            used = "sim-jax"
         else:
             res = _run_entries(sts, ent_st, ent_origin, ent_seeds,
                                self.plan.top.n, p, pol.algorithm,
                                pol.dynamic, pol.lifetime_mean_s,
                                spec.independent)
+            used = "sim"
 
         bm = BatchMetrics.empty(pol.algorithm, Q, T)
         n_reached_s = np.array([len(st.idx) for st in sts], np.int64)
@@ -141,7 +158,7 @@ class SimEngine:
         for f in _BM_FIELDS:
             getattr(bm, f)[:] = res[f].reshape(Q, T)
         return TopKResult(policy=pol.name, backend=self.backend, k=p.k,
-                          metrics=bm)
+                          backend_used=used, metrics=bm)
 
     # ---- statistics heuristic (paper §3.3 + Fig 7) ----------------------
 
@@ -150,6 +167,8 @@ class SimEngine:
         """Two-round protocol: round 1 full FD gathers per-child best-rank
         stats; round 2 forwards Q only to children whose best past score
         ranked above ``z * k`` in the parent's merged list."""
+        used = self._fallback("the two-round fd-stats heuristic has no "
+                              "jitted lowering")
         origins = np.atleast_1d(np.asarray(spec.origins, dtype=np.int64))
         if len(origins) != 1 or spec.n_trials != 1:
             raise ValueError("fd-stats runs one origin x one trial per call")
@@ -195,7 +214,7 @@ class SimEngine:
         reduction = 1.0 - met2.total_bytes / max(met1.total_bytes, 1)
         return TopKResult(
             policy=pol.name, backend=self.backend, k=k,
-            metrics=_batch_of_one(met2),
+            backend_used=used, metrics=_batch_of_one(met2),
             extras={"metrics_full": met1, "metrics_pruned": met2,
                     "comm_reduction": reduction, "accuracy": acc,
                     "z": pol.z})

@@ -26,9 +26,23 @@ The jit cache keys on the tree's level/round size profile plus
 (n_entries, k) — origin identities travel as device-cached index
 arrays, so repeated runs on a prepared plan never recompile.
 
-Churn (finite ``lifetime_mean_s``) keeps the numpy path: dead-parent
-rerouting is a sparse per-event process the dense sweep has no business
-emulating (``SimEngine`` falls back transparently).
+Churn (finite ``lifetime_mean_s``, §4/§5.4) runs end-to-end in the
+same jitted sweep — no numpy fallback:
+
+  * exponential death times come from the SHARED numpy draws
+    (``EntryDraws.death``), so the stochastic inputs stay bit-identical
+    across backends;
+  * a peer dead at its send time contributes ``inf`` arrivals and
+    ``-inf`` k-list rows — pure masks, no data-dependent shapes;
+  * §4.2 dead-parent rerouting folds over the plan's STATIC reroute
+    candidate tables (``DepthSlices`` with ``reroute=True``): every
+    grandchild is a fixed slot in an augmented merge schedule whose
+    per-entry liveness mask ("my parent died, I did not") decides at
+    run time whether it contributes — fixed-shape gather/select, like
+    everything else here;
+  * urgent-list forwarding (§4.1) and the reroute message accounting
+    stay in the shared numpy epilogue, computed from the per-level
+    ``alive`` masks the sweep returns.
 """
 from __future__ import annotations
 
@@ -47,12 +61,12 @@ from repro.kernels.merge.ops import merge_scorelists
 from repro.p2psim.metrics import ENTRY_BYTES_PAPER
 from repro.p2psim.simulate import (SimParams, _accept_urgent_origin,
                                    _cn_entries, _empty_out,
-                                   _precompute_draws, _retrieval_exact,
-                                   _retrieval_shared, _true_topk_by_origin,
-                                   wait_time)
+                                   _precompute_draws, _reroute_counts,
+                                   _retrieval_exact, _retrieval_shared,
+                                   _true_topk_by_origin, wait_time)
 
 
-def _merge_desc(va, ia, vb, ib):
+def _merge_desc(va, ia, vb, ib, valid_a=None, valid_b=None):
     """Fused bitonic merge of two descending K-lists (K a power of two).
 
     ``max(a_i, reverse(b)_i)`` selects the top-K multiset of the union
@@ -60,7 +74,16 @@ def _merge_desc(va, ia, vb, ib):
     descending.  Pure elementwise min/max/select — XLA fuses the whole
     network into one pass.  Exact for distinct values (and the -inf
     padding only ever ties with itself beyond the real entries).
+
+    ``valid_a`` / ``valid_b``: optional row masks — an invalid list
+    (late child, churned-out peer, live-parent reroute slot) becomes
+    -inf rows, which real scores always beat, so validity costs one
+    fused select instead of a branch.
     """
+    if valid_a is not None:
+        va = jnp.where(valid_a[..., None], va, -jnp.inf)
+    if valid_b is not None:
+        vb = jnp.where(valid_b[..., None], vb, -jnp.inf)
     K = va.shape[-1]
     fb = vb[..., ::-1]
     fo = ib[..., ::-1]
@@ -83,41 +106,78 @@ def _merge_desc(va, ia, vb, ib):
     return v, o
 
 
-def _merge_lists(va, ia, vb, ib, use_pallas: bool):
+def _merge_lists(va, ia, vb, ib, use_pallas: bool,
+                 valid_a=None, valid_b=None):
     """One pairwise descending k-list merge (top-k of the union)."""
     if use_pallas:
         return merge_scorelists(
             va, ia, vb, ib, use_pallas=True,
-            interpret=jax.default_backend() != "tpu")
-    return _merge_desc(va, ia, vb, ib)
+            interpret=jax.default_backend() != "tpu",
+            valid_a=valid_a, valid_b=valid_b)
+    return _merge_desc(va, ia, vb, ib, valid_a, valid_b)
 
 
-def _retire(pools, lv):
-    """Gather each finished segment's slot, in parent-ascending order."""
-    parts = [pools[r][:, idx] for r, idx in enumerate(lv["ret"])
-             if idx is not None]
-    return jnp.concatenate(parts, axis=1)[:, lv["ret_perm"]]
+def _retire(pools, ret, ret_perm, valid=None):
+    """Gather each finished segment's slot, in parent-ascending order.
+
+    ``valid``: slot mask over the ROUND-0 pool.  Only round-0
+    retirements (single-slot segments) can surface a never-merged input
+    slot, so that is the only place the mask applies — every later
+    retirement is a merge output, already mask-resolved.
+    """
+    parts = []
+    for r, idx in enumerate(ret):
+        if idx is None:
+            continue
+        seg = pools[r][:, idx]
+        if valid is not None and r == 0:
+            m = valid[:, idx]
+            seg = jnp.where(m[..., None] if seg.ndim == 3 else m,
+                            seg, -jnp.inf)
+        parts.append(seg)
+    return jnp.concatenate(parts, axis=1)[:, ret_perm]
 
 
-def _fold_lists(cv, co, lv, use_pallas):
-    """Run the level's static fold schedule over the (masked) child
-    k-lists; returns each parent's merged children top-k, in
-    parent-ascending order."""
+def _fold_lists(cv, co, sched, use_pallas, valid=None):
+    """Run the static fold schedule ``sched = (rounds, ret, ret_perm)``
+    over the child (and, in churn mode, reroute-candidate) k-lists;
+    returns each parent's merged top-k, in parent-ascending order.
+
+    ``valid``: per-slot liveness over round 0's slots.  The mask is
+    THREADED through the fold — merge inputs mask at the kernel, merge
+    outputs are always valid, carried slots inherit — so no masked copy
+    of the full child array is ever materialized.
+    """
+    rounds, ret, ret_perm = sched
     pools_v, pools_o = [cv], [co]
-    for mi_a, mi_b, pi in lv["rounds"]:
+    vm = valid
+    for mi_a, mi_b, pi in rounds:
+        ma = mb = None
+        if vm is not None:
+            ma, mb = vm[:, mi_a], vm[:, mi_b]
         mv, mo = _merge_lists(cv[:, mi_a], co[:, mi_a],
-                              cv[:, mi_b], co[:, mi_b], use_pallas)
+                              cv[:, mi_b], co[:, mi_b], use_pallas,
+                              ma, mb)
         if pi.shape[0]:
             mv = jnp.concatenate([mv, cv[:, pi]], axis=1)
             mo = jnp.concatenate([mo, co[:, pi]], axis=1)
+            if vm is not None:
+                vm = jnp.concatenate(
+                    [jnp.ones(mv.shape[:1] + (mi_a.shape[0],), bool),
+                     vm[:, pi]], axis=1)
+        elif vm is not None:
+            vm = jnp.ones(mv.shape[:2], bool)
         cv, co = mv, mo
         pools_v.append(mv)
         pools_o.append(mo)
-    return _retire(pools_v, lv), _retire(pools_o, lv)
+    return (_retire(pools_v, ret, ret_perm, valid),
+            _retire(pools_o, ret, ret_perm))
 
 
 def _fold_max(a, lv):
-    """Same schedule, max-reduce: each parent's latest child arrival."""
+    """Child-slot schedule, max-reduce: each parent's latest child
+    arrival (dead children carry ``inf`` — the paper's waiting parent
+    can only be released by its deadline)."""
     pools = [a]
     for mi_a, mi_b, pi in lv["rounds"]:
         ma = jnp.maximum(a[:, mi_a], a[:, mi_b])
@@ -125,13 +185,15 @@ def _fold_max(a, lv):
             ma = jnp.concatenate([ma, a[:, pi]], axis=1)
         a = ma
         pools.append(ma)
-    return _retire(pools, lv)
+    return _retire(pools, lv["ret"], lv["ret_perm"])
 
 
 @functools.partial(jax.jit, static_argnames=("k", "use_pallas",
-                                             "with_st1"))
-def _fd_sweep(scores, t_exec, up_term, dn_term, wt, tqf, lam, levels,
-              els, *, k, use_pallas, with_st1):
+                                             "with_st1", "with_churn",
+                                             "with_reroute"))
+def _fd_sweep(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
+              levels, els, rr, *, k, use_pallas, with_st1, with_churn,
+              with_reroute):
     """Forward + merge-and-backward sweeps of one origin's tree.
 
     Per-level functional form: level d's arrays are produced from level
@@ -139,6 +201,16 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, wt, tqf, lam, levels,
     buffer.  Bit-parity contract: every float expression groups exactly
     as the numpy sweep's; k-lists are padded to K = 2^ceil(log2 k) with
     -inf tails that never surface in the top k.
+
+    Churn (``with_churn``): a peer dead at its would-be send time gets
+    ``send = inf`` (its arrival can never release a waiting parent) and
+    -inf / -1 merged rows — the exact fill the numpy sweep commits.
+    ``with_reroute`` additionally folds each level's static grandchild
+    table (``rr_*``): a grandchild slot is live iff its parent died and
+    it did not, which reproduces §4.2's "children of a dead peer send
+    their lists to the grandparent".  All of it is masks over fixed
+    shapes; the one scalar the masks hinge on — the peer's death time —
+    comes from the shared numpy draws.
     """
     E = t_exec.shape[0]
     K = _next_pow2(k)
@@ -160,6 +232,7 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, wt, tqf, lam, levels,
     send = [None] * (dmax + 1)
     m_v = [None] * (dmax + 1)
     m_o = [None] * (dmax + 1)
+    alive = [None] * (dmax + 1)
     for d in range(dmax, -1, -1):
         lv = levels[d]
         vv = lv["vv"]
@@ -174,36 +247,61 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, wt, tqf, lam, levels,
                                  (E, L, K))
         if "cnode" not in lv:                    # all leaves
             all_in = jnp.zeros((E, L))
-            send[d] = jnp.minimum(
-                jnp.maximum(own_ready, all_in),
-                jnp.maximum(deadline, own_ready))
-            m_v[d], m_o[d] = own_v, own_o
-            continue
-        a0 = send[d + 1][:, lv["c_in_next"]] + up_term[:, lv["cnode"]]
-        # the parent's send time (needed for the on-time mask) depends
-        # on all_in, a pure max over ALL child arrivals — mask-free,
-        # exactly as numpy computes it
-        n_par = lv["ret_perm"].shape[0]
-        all_in = jnp.concatenate(
-            [_fold_max(a0, lv), jnp.zeros((E, L - n_par))],
-            axis=1)[:, lv["asm_perm"]]
-        s = jnp.minimum(jnp.maximum(own_ready, all_in),
-                        jnp.maximum(deadline, own_ready))
-        send[d] = s
-        ont = a0 <= s[:, lv["cpar_pos"]]
-        cv0 = jnp.where(ont[..., None],
-                        m_v[d + 1][:, lv["c_in_next"]], -jnp.inf)
-        co0 = m_o[d + 1][:, lv["c_in_next"]]
-        child_v, child_o = _fold_lists(cv0, co0, lv, use_pallas)
-        pv, po = _merge_lists(own_v[:, lv["par_sel"]],
-                              own_o[:, lv["par_sel"]],
-                              child_v, child_o, use_pallas)
-        m_v[d] = jnp.concatenate(
-            [pv, own_v[:, lv["leaf_sel"]]], axis=1)[:, lv["asm_perm"]]
-        m_o[d] = jnp.concatenate(
-            [po, own_o[:, lv["leaf_sel"]]], axis=1)[:, lv["asm_perm"]]
+            s = jnp.minimum(jnp.maximum(own_ready, all_in),
+                            jnp.maximum(deadline, own_ready))
+            mv, mo = own_v, own_o
+        else:
+            a0 = send[d + 1][:, lv["c_in_next"]] + up_term[:, lv["cnode"]]
+            # the parent's send time (needed for the on-time mask)
+            # depends on all_in, a pure max over ALL child arrivals
+            # (dead children contribute inf) — mask-free, exactly as
+            # numpy computes it
+            n_par = lv["ret_perm"].shape[0]
+            all_in = jnp.concatenate(
+                [_fold_max(a0, lv), jnp.zeros((E, L - n_par))],
+                axis=1)[:, lv["asm_perm"]]
+            s = jnp.minimum(jnp.maximum(own_ready, all_in),
+                            jnp.maximum(deadline, own_ready))
+            # on-time = arrived by the parent's (raw) send time; a dead
+            # child's a0 is inf, so validity is already folded in
+            ont = a0 <= s[:, lv["cpar_pos"]]
+            cv0 = m_v[d + 1][:, lv["c_in_next"]]
+            co0 = m_o[d + 1][:, lv["c_in_next"]]
+            vmask = ont
+            sched = (lv["rounds"], lv["ret"], lv["ret_perm"])
+            if with_reroute and rr[d] is not None:
+                # §4.2 reroute slots: level-(d+2) lists contribute to
+                # their grandparent iff their parent died (their own
+                # death is already folded into m_v's -inf rows)
+                gv = m_v[d + 2][:, rr[d]["gc_pos"]]
+                go = m_o[d + 2][:, rr[d]["gc_pos"]]
+                gmask = ~alive[d + 1][:, rr[d]["gc_par_pos"]]
+                cv0 = jnp.concatenate([cv0, gv], axis=1)
+                co0 = jnp.concatenate([co0, go], axis=1)
+                vmask = jnp.concatenate([ont, gmask], axis=1)
+                sched = (rr[d]["rounds"], rr[d]["ret"],
+                         rr[d]["ret_perm"])
+            child_v, child_o = _fold_lists(cv0, co0, sched, use_pallas,
+                                           valid=vmask)
+            pv, po = _merge_lists(own_v[:, lv["par_sel"]],
+                                  own_o[:, lv["par_sel"]],
+                                  child_v, child_o, use_pallas)
+            mv = jnp.concatenate(
+                [pv, own_v[:, lv["leaf_sel"]]], axis=1)[:, lv["asm_perm"]]
+            mo = jnp.concatenate(
+                [po, own_o[:, lv["leaf_sel"]]], axis=1)[:, lv["asm_perm"]]
+        if with_churn:
+            alv = death[:, vv] >= s
+            alive[d] = alv
+            send[d] = jnp.where(alv, s, jnp.inf)
+            m_v[d] = jnp.where(alv[..., None], mv, -jnp.inf)
+            m_o[d] = jnp.where(alv[..., None], mo, -1)
+        else:
+            send[d] = s
+            m_v[d], m_o[d] = mv, mo
     return (tuple(send), tuple(v[:, :, :k] for v in m_v),
-            tuple(o[:, :, :k] for o in m_o), skip)
+            tuple(o[:, :, :k] for o in m_o), skip,
+            tuple(alive) if with_churn else None)
 
 
 @jax.jit
@@ -219,24 +317,39 @@ def _cn_sweep(t_exec, dn_term, levels):
                  for tq, lv in zip(t_qs, levels))
 
 
+def _conv_slice_field(f, v):
+    if f.endswith("rounds"):
+        return tuple(tuple(jnp.asarray(x) for x in rnd) for rnd in v)
+    if f.endswith("ret"):
+        return tuple(None if idx is None else jnp.asarray(idx)
+                     for idx in v)
+    return jnp.asarray(v)
+
+
 def _device_slices(sl: DepthSlices):
-    """DepthSlices as cached device arrays (one transfer per plan)."""
+    """DepthSlices as cached device arrays (one transfer per plan).
+
+    The reroute (``rr_*``) tables are cached SEPARATELY and returned as
+    their own per-level tuple: the static sweep's ``levels`` pytree
+    never changes shape when a plan later serves churn policies, so its
+    jit traces and device uploads stay valid.
+    """
     cached = getattr(sl, "_device", None)
     if cached is None:
-        def conv(f, v):
-            if f == "rounds":
-                return tuple(tuple(jnp.asarray(x) for x in rnd)
-                             for rnd in v)
-            if f == "ret":
-                return tuple(None if idx is None else jnp.asarray(idx)
-                             for idx in v)
-            return jnp.asarray(v)
-        levels = tuple({f: conv(f, v) for f, v in lv.items()}
-                       for lv in sl.levels)
+        levels = tuple({f: _conv_slice_field(f, v) for f, v in lv.items()
+                        if not f.startswith("rr_")} for lv in sl.levels)
         els = (jnp.asarray(sl.els_src), jnp.asarray(sl.els_dst),
                jnp.asarray(sl.cond))
         cached = sl._device = (levels, els)
-    return cached
+    rr = getattr(sl, "_device_rr", None)
+    if rr is None and sl.reroute:
+        rr = sl._device_rr = tuple(
+            {f[3:]: _conv_slice_field(f, lv[f])
+             for f in ("rr_gc_pos", "rr_gc_par_pos", "rr_rounds",
+                       "rr_ret", "rr_ret_perm")}
+            if "rr_rounds" in lv else None
+            for lv in sl.levels)
+    return cached + (rr,)
 
 
 def _sub(a: np.ndarray, es: np.ndarray, E: int) -> np.ndarray:
@@ -251,12 +364,10 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
     """Drop-in for the numpy ``_run_entries`` with jitted sweeps.
 
     Same contract, same outputs, same bits — see the module docstring.
-    Requires an infinite-lifetime (no-churn) policy; ``SimEngine``
-    routes churn variants to the numpy path.
+    Finite ``lifetime_mean_s`` (churn) runs in the same jitted sweep;
+    there is no numpy fallback.
     """
-    if not math.isinf(lifetime_mean_s):
-        raise ValueError("the jax backend is churn-free; SimEngine falls "
-                         "back to the numpy sweep for finite lifetimes")
+    churn = not math.isinf(lifetime_mean_s)
     E = len(seeds)
     S = len(sts)
     k = p.k
@@ -278,7 +389,7 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
             for s, st in enumerate(sts):
                 es = ent_of_st[s]
                 sl = plan.depth_slices(st)
-                levels, _ = _device_slices(sl)
+                levels, _, _ = _device_slices(sl)
                 ted = _cn_sweep(_sub(draws.t_exec, es, E),
                                 _sub(draws.dn_term, es, E), levels)
                 for d, lv in enumerate(sl.levels):
@@ -288,38 +399,53 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
         return out
 
     # ---- FD: jitted forward + merge sweeps per origin -------------------
+    with_reroute = churn and dynamic
     send_t = np.full((E, n), np.inf)
     mvals = np.empty((E, n, k))
     mown = np.full((E, n, k), -1, np.int32)
+    valid = np.zeros((E, n), bool) if churn else None
     with jaxcompat.enable_x64():
         for s, st in enumerate(sts):
             es = ent_of_st[s]
-            sl = plan.depth_slices(st)
-            levels, els = _device_slices(sl)
+            sl = plan.depth_slices(st, reroute=with_reroute)
+            levels, els, rr = _device_slices(sl)
             with_st1 = st.fw_strategy != "basic"
             tqf = lam = np.zeros(0)
             if with_st1:
                 tqf = np.where(st.depth >= 0, st.depth * p.t_qsnd_s,
                                np.inf)
                 lam = _sub(draws.lam, es, E)
-            send_d, mv_d, mo_d, skip = _fd_sweep(
+            death = _sub(draws.death, es, E) if churn else np.zeros(0)
+            send_d, mv_d, mo_d, skip, alive_d = _fd_sweep(
                 _sub(draws.scores, es, E), _sub(draws.t_exec, es, E),
                 _sub(draws.up_term, es, E), _sub(draws.dn_term, es, E),
-                wait_time(st.ttl_rem, p), tqf, lam, levels, els,
-                k=k, use_pallas=bool(use_pallas), with_st1=with_st1)
+                death, wait_time(st.ttl_rem, p), tqf, lam, levels, els,
+                rr if with_reroute else None,
+                k=k, use_pallas=bool(use_pallas), with_st1=with_st1,
+                with_churn=churn, with_reroute=with_reroute)
             for d, lv in enumerate(sl.levels):
                 rows = np.ix_(es, lv["vv"])
                 send_t[rows] = np.asarray(send_d[d])
                 mvals[rows] = np.asarray(mv_d[d])
                 mown[rows] = np.asarray(mo_d[d])
+                if churn:
+                    valid[rows] = np.asarray(alive_d[d])
             out["m_fw"][es] = (st.fw_static + sl.n_els
                                - np.asarray(skip, np.int64)
                                if with_st1 else st.m_basic)
 
-    # no churn: every reached non-origin peer sends exactly once
-    n_reached_arr = np.array([len(st.idx) for st in sts], np.int64)
-    out["m_bw"] += n_reached_arr[ent_st] - 1
-    out["b_bw"] += (n_reached_arr[ent_st] - 1) * list_bytes
+    # every reached peer that is still alive at its send time sends its
+    # list exactly once (without churn that is everyone but the origin)
+    if churn:
+        for s, st in enumerate(sts):
+            es = ent_of_st[s]
+            n_alive = valid[np.ix_(es, st.idx)].sum(axis=1)
+            out["m_bw"][es] += n_alive - 1        # origin never dies
+            out["b_bw"][es] += (n_alive - 1) * list_bytes
+    else:
+        n_reached_arr = np.array([len(st.idx) for st in sts], np.int64)
+        out["m_bw"] += n_reached_arr[ent_st] - 1
+        out["b_bw"] += (n_reached_arr[ent_st] - 1) * list_bytes
 
     # ---- urgent lists (§4.1): late-arrival post-pass --------------------
     urgent: list = [[] for _ in range(E)]
@@ -333,6 +459,10 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
             pr = st.parent[ch]
             a = send_t[np.ix_(es, ch)] + draws.up_term[np.ix_(es, ch)]
             late = a > send_t[np.ix_(es, pr)]
+            if churn:
+                # a dead child never went urgent; a dead parent's
+                # children reroute (counted below) instead
+                late &= valid[np.ix_(es, ch)] & valid[np.ix_(es, pr)]
             if not late.any():
                 continue
             d_par = st.depth[pr]
@@ -344,10 +474,18 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
             out["b_bw"][es] += (late
                                 * (d_par[None, :] * list_bytes)).sum(axis=1)
 
+    # ---- §4.2 reroute accounting: one message per accepted list ---------
+    if with_reroute:
+        for s, st in enumerate(sts):
+            es = ent_of_st[s]
+            cnt = _reroute_counts(st, valid[es])
+            out["m_bw"][es] += cnt
+            out["b_bw"][es] += cnt * list_bytes
+
     top_true_all = _true_topk_by_origin(draws.scores, sts, ent_of_st, k)
     t_merge_done = send_t[np.arange(E), ent_origin] + p.merge_s
     _accept_urgent_origin(urgent, ent_origin, t_merge_done, mvals, mown,
-                          None, k)
+                          valid, k)
     if draws.exact:
         _retrieval_exact(out, draws, ent_origin, t_merge_done, mvals,
                          mown, top_true_all, p)

@@ -71,12 +71,21 @@ def _lane_swap(x, stride: int, m: int):
     return y.reshape(x.shape)
 
 
-def _merge_kernel(va_ref, ia_ref, vb_ref, ib_ref, vo_ref, io_ref, *,
-                  k: int, m: int, dt):
+def _merge_kernel(va_ref, ia_ref, vb_ref, ib_ref, *refs,
+                  k: int, m: int, dt, masked: bool):
+    if masked:
+        ma_ref, mb_ref, vo_ref, io_ref = refs
+    else:
+        vo_ref, io_ref = refs
     va = va_ref[...].astype(dt)
     ia = ia_ref[...]
     vb = vb_ref[...].astype(dt)
     ib = ib_ref[...]
+    if masked:
+        # validity masking in VMEM: a dead peer's list becomes -inf rows
+        # (it can never beat a live score) — pure select, no control flow
+        va = jnp.where(ma_ref[...] != 0, va, NEG_INF)
+        vb = jnp.where(mb_ref[...] != 0, vb, NEG_INF)
     pad = m // 2 - k
     if pad:
         va = jnp.pad(va, ((0, 0), (0, pad)), constant_values=NEG_INF)
@@ -91,11 +100,18 @@ def _merge_kernel(va_ref, ia_ref, vb_ref, ib_ref, vo_ref, io_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def merge_pallas(vals_a, idx_a, vals_b, idx_b, *, interpret: bool = True):
+def merge_pallas(vals_a, idx_a, vals_b, idx_b, *, interpret: bool = True,
+                 valid_a=None, valid_b=None):
     """Merge two descending k-lists -> top-k of the union (descending).
 
     float64 inputs (the x64 simulator sweep, interpret mode) merge in
     float64; anything narrower keeps the float32 compute dtype.
+
+    ``valid_a`` / ``valid_b``: optional boolean row masks over the
+    leading axes (churned-out peers).  Masking happens inside the kernel
+    on the VMEM-resident block — an invalid list's values become -inf
+    before the bitonic network runs, identical to pre-masking the HBM
+    input but without materializing a masked copy.
     """
     lead = vals_a.shape[:-1]
     k = vals_a.shape[-1]
@@ -105,12 +121,21 @@ def merge_pallas(vals_a, idx_a, vals_b, idx_b, *, interpret: bool = True):
     b = va.shape[0]
     args = [va, idx_a.reshape((-1, k)), vals_b.reshape((-1, k)),
             idx_b.reshape((-1, k))]
-    kern = functools.partial(_merge_kernel, k=k, m=m, dt=dt)
+    masked = valid_a is not None or valid_b is not None
     spec = pl.BlockSpec((1, k), lambda i: (i, 0))
+    in_specs = [spec] * 4
+    if masked:
+        ones = jnp.ones(lead, jnp.int32)
+        args.append((ones if valid_a is None
+                     else valid_a.astype(jnp.int32)).reshape((-1, 1)))
+        args.append((ones if valid_b is None
+                     else valid_b.astype(jnp.int32)).reshape((-1, 1)))
+        in_specs = in_specs + [pl.BlockSpec((1, 1), lambda i: (i, 0))] * 2
+    kern = functools.partial(_merge_kernel, k=k, m=m, dt=dt, masked=masked)
     vo, io = pl.pallas_call(
         kern,
         grid=(b,),
-        in_specs=[spec] * 4,
+        in_specs=in_specs,
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct((b, k), dt),
                    jax.ShapeDtypeStruct((b, k), jnp.int32)],

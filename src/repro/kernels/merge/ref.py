@@ -9,14 +9,24 @@ import jax
 import jax.numpy as jnp
 
 
-def merge_ref(vals_a, idx_a, vals_b, idx_b, k: int | None = None):
+def merge_ref(vals_a, idx_a, vals_b, idx_b, k: int | None = None,
+              valid_a=None, valid_b=None):
     """Merge two descending (vals, idx) k-lists along the last axis.
 
     Returns the top-k of the union, descending.  Ties are broken in favour
     of list ``a`` then lower position (stable lax.top_k over the concat).
+
+    ``valid_a`` / ``valid_b``: optional boolean row masks over the
+    leading axes — an invalid list contributes ``-inf`` values (its
+    entries can never surface among real scores), so churned-out peers
+    cost a select, not a branch.
     """
     if k is None:
         k = vals_a.shape[-1]
+    if valid_a is not None:
+        vals_a = jnp.where(valid_a[..., None], vals_a, -jnp.inf)
+    if valid_b is not None:
+        vals_b = jnp.where(valid_b[..., None], vals_b, -jnp.inf)
     # float64 lists (the x64 simulator sweep) merge in float64; anything
     # narrower keeps the historical float32 compute dtype
     dt = jnp.promote_types(jnp.result_type(vals_a, vals_b), jnp.float32)

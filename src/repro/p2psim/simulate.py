@@ -544,6 +544,14 @@ def _precompute_draws(ent_origin: np.ndarray, seeds, n: int, p: SimParams,
     The order is ``run_query_reference``'s: n_tuples, score uniforms,
     upward link, downward link, churn deaths, item sizes, then the
     per-algorithm extras (cn originator links / st1 wait lambdas).
+
+    The churn draws live here too: ``death`` (exponential residual
+    lifetimes, origin clamped immortal) is the ONE stochastic input the
+    whole §4 machinery — peer removal, urgent forwarding, dead-parent
+    rerouting — hinges on, so every backend consumes the same numpy
+    deaths and churn parity reduces to sweep math.  Rerouting itself is
+    deterministic in the paper's model (children go to the grandparent),
+    so no further draws are needed.
     """
     E = len(seeds)
     k = p.k
@@ -998,6 +1006,24 @@ def _true_topk_by_origin(scores: np.ndarray, sts, ent_of_st,
         part = np.partition(block, -k, axis=1)[:, -k:]
         top_true_all[es] = np.sort(part, axis=1)[:, ::-1]
     return top_true_all
+
+
+def _reroute_counts(st, valid_rows: np.ndarray) -> np.ndarray:
+    """Per-entry count of §4.2 dead-parent reroutes (backend-shared).
+
+    A reroute message is sent per grandchild ``cc`` whose parent died
+    before its send time while both ``cc`` and the grandparent survive
+    — exactly the lists the numpy sweep re-merges and the jax sweep's
+    masked reroute fold accepts.  ``valid_rows``: (entries, n) liveness
+    (True = alive at its send time) for this origin's entries.
+    """
+    ch = st.kid_sorted
+    pr = st.parent[ch]
+    has_gp = st.parent[pr] >= 0
+    cc, pp = ch[has_gp], pr[has_gp]
+    gp = st.parent[pp]
+    return (valid_rows[:, cc] & ~valid_rows[:, pp]
+            & valid_rows[:, gp]).sum(axis=1)
 
 
 def _accept_urgent_origin(urgent, ent_origin: np.ndarray,

@@ -162,16 +162,148 @@ def test_jax_backend_pallas_kernel_path():
     _assert_metrics_equal(rp.metrics, rn.metrics, "pallas")
 
 
-def test_jax_backend_churn_falls_back_and_stats_run():
+@pytest.mark.parametrize("name", STANDARD)
+def test_jax_backend_churn_bit_exact_all_policies(name):
+    """Finite ``lifetime_mean_s`` runs IN the jitted sweep (no numpy
+    fallback, asserted via ``backend_used``) and stays bit-exact: ==
+    the numpy backend in every rng mode, == the scalar reference
+    wherever numpy is (shared batch of one, independent streams)."""
+    pol = get_policy(name).variant(lifetime_mean_s=25.0)
+    en = SimEngine(JTOP, PA)
+    ej = SimEngine(JTOP, PA, backend="jax")
+    kw = _legacy_kwargs(pol)
+    # shared batch of one == scalar reference, executed on the jax path
+    met, _ = run_query_reference(JTOP, 5, SimParams(seed=2), **kw)
+    res = ej.run(QuerySpec(origins=(5,), seed=2), pol)
+    assert res.backend_used == "sim-jax"          # no silent fallback
+    assert res.query_metrics(0, 0) == met
+    # independent streams: entry-wise reference parity under churn
+    spec = QuerySpec(origins=(0, 7), n_trials=2, rng="independent")
+    rj = ej.run(spec, pol)
+    assert rj.backend_used == "sim-jax"
+    for q, o in enumerate((0, 7)):
+        for t in range(2):
+            met, _ = run_query_reference(
+                JTOP, o, dataclasses.replace(PA, seed=PA.seed + q * 2 + t),
+                **kw)
+            assert rj.query_metrics(q, t) == met, (name, q, t)
+    # shared stream, batch > 1: full cross-backend equality
+    spec = QuerySpec(origins=(1, 8), n_trials=3)
+    _assert_metrics_equal(ej.run(spec, pol).metrics,
+                          en.run(spec, pol).metrics, name)
+
+
+def test_jax_backend_no_churn_fallback_and_stats_warns_once():
+    """Churn executes on the jax path (the old transparent numpy
+    fallback is gone); the one remaining fallback — fd-stats — is
+    recorded on ``backend_used`` and warned about at most ONCE per
+    engine, however many runs hit it."""
+    import warnings as _warnings
     ej = SimEngine(JTOP, PA, backend="jax")
     en = SimEngine(JTOP, PA)
     pol = get_policy("fd-dynamic").variant(lifetime_mean_s=30.0)
-    assert (ej.run(QuerySpec(origins=(0,)), pol).query_metrics(0, 0)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")           # churn must NOT warn
+        rj = ej.run(QuerySpec(origins=(0,)), pol)
+    assert rj.backend == rj.backend_used == "sim-jax"
+    assert (rj.query_metrics(0, 0)
             == en.run(QuerySpec(origins=(0,)), pol).query_metrics(0, 0))
-    rs = ej.run(QuerySpec(origins=(0,)), "fd-stats")
+    with _warnings.catch_warnings(record=True) as seen:
+        _warnings.simplefilter("always")
+        rs = ej.run(QuerySpec(origins=(0,)), "fd-stats")
+        ej.run(QuerySpec(origins=(0,)), "fd-stats")   # second run: silent
+    assert rs.backend == "sim-jax" and rs.backend_used == "sim"
+    fallback_warns = [w for w in seen
+                      if "numpy reference path" in str(w.message)]
+    assert len(fallback_warns) == 1
     rn = en.run(QuerySpec(origins=(0,)), "fd-stats")
+    assert rn.backend_used == rn.backend == "sim"     # numpy: no warning
     assert rs.extras["metrics_full"] == rn.extras["metrics_full"]
     assert rs.extras["accuracy"] == rn.extras["accuracy"]
+
+
+# --------------------------------------------------------------------------
+# churn edge cases (§4/§5.4): the scenarios the jitted sweep must nail
+# --------------------------------------------------------------------------
+
+def _edges_topology(n, edges):
+    from repro.p2psim.graph import Topology
+    adj = [set() for _ in range(n)]
+    for u, v in edges:
+        adj[u].add(v)
+        adj[v].add(u)
+    return Topology(n, [np.array(sorted(a), np.int32) for a in adj],
+                    "test")
+
+
+# a 5-level tree: levels {0} {1,2} {3,4,5} {6,7,8} {9,10} — small enough
+# to scan seeds against the scalar reference, deep enough for reroute
+# cascades (grandchildren exist at three levels)
+CHURN_TREE = _edges_topology(
+    11, [(0, 1), (0, 2), (1, 3), (1, 4), (2, 5), (3, 6), (4, 7), (5, 8),
+         (6, 9), (7, 10)])
+
+
+def _churn_reference(seed, lifetime):
+    met, st = run_query_reference(
+        CHURN_TREE, 0, SimParams(seed=seed), lifetime_mean_s=lifetime,
+        return_state=True)
+    dead = {int(v) for v in np.flatnonzero(st["reached"])
+            if st["merged_scores"][v] is None}
+    return met, st, dead
+
+
+def test_churn_entire_level_dead_forces_reroute_cascade():
+    """An ENTIRE depth level dies before sending: every level-2 list
+    must reach the origin through §4.2 rerouting (dead parent ->
+    grandparent), and both engine backends must reproduce the scalar
+    reference bit-for-bit on that entry."""
+    found = None
+    for seed in range(500):
+        met, st, dead = _churn_reference(seed, 2.5)
+        lvl1 = {int(v) for v in np.flatnonzero(st["depth"] == 1)}
+        lvl2 = {int(v) for v in np.flatnonzero(st["depth"] == 2)}
+        if lvl1 and lvl1 <= dead and (lvl2 - dead):
+            found = (seed, met, lvl2 - dead)
+            break
+    assert found is not None, "no full-level-dead seed found in range"
+    seed, met, rerouted = found
+    pol = get_policy("fd-dynamic").variant(lifetime_mean_s=2.5)
+    spec = QuerySpec(origins=(0,), seed=seed)
+    for backend in ("numpy", "jax"):
+        res = SimEngine(CHURN_TREE, backend=backend).run(spec, pol)
+        assert res.query_metrics(0, 0) == met, backend
+    # the surviving level-2 lists were rerouted, not dropped: their
+    # owners can only appear in the final list via the dead parent's
+    # replacement path
+    assert met.m_bw >= len(rerouted)
+
+
+def test_churn_lifetime_shorter_than_one_hop_wait():
+    """lifetime_mean_s far below a single hop's latency: every
+    non-origin peer dies before its send time.  The origin is clamped
+    immortal in the SHARED draws (the paper's originator waits out its
+    own query), answers from its own k-list alone, and all backends
+    agree bit-for-bit."""
+    from repro.p2psim.simulate import _precompute_draws
+    pa = SimParams(seed=3)
+    lifetime = 0.01                     # hop latency alone is ~0.2 s
+    draws = _precompute_draws(np.array([0]), [pa.seed], CHURN_TREE.n, pa,
+                              "fd", "st1+2", lifetime, True)
+    assert np.isinf(draws.death[0, 0])            # origin never dies
+    assert np.isfinite(draws.death[0, 1:]).all()
+    met, st, dead = _churn_reference(pa.seed, lifetime)
+    reached = {int(v) for v in np.flatnonzero(st["reached"])}
+    assert 0 not in dead and reached - {0} <= dead
+    pol = get_policy("fd-dynamic").variant(lifetime_mean_s=lifetime)
+    spec = QuerySpec(origins=(0,), seed=pa.seed)
+    rj = SimEngine(CHURN_TREE, backend="jax").run(spec, pol)
+    rn = SimEngine(CHURN_TREE).run(spec, pol)
+    assert rj.query_metrics(0, 0) == met == rn.query_metrics(0, 0)
+    assert int(rj.metrics.m_bw[0, 0]) == 0        # nobody lived to send
+    # heavy churn must cost accuracy vs the static network
+    static, _ = run_query_reference(CHURN_TREE, 0, SimParams(seed=3))
+    assert met.accuracy < static.accuracy
 
 
 def test_jax_backend_nonpow2_k_and_explicit_seeds():

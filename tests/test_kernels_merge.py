@@ -63,6 +63,35 @@ def test_merge_associative(k, seed):
     np.testing.assert_allclose(np.asarray(l1[0]), np.asarray(l2[0]))
 
 
+@pytest.mark.parametrize("k", [4, 8, 20])
+def test_merge_valid_masks_match_premasked(k):
+    """valid_a/valid_b row masks (churned-out peers) == pre-masking the
+    input values to -inf, on the jnp oracle AND inside the Pallas
+    kernel — and an invalid list is absorbed like the empty list."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(7))
+    lead = (3, 5)
+    va, ia = _mk_list(ka, lead, k)
+    vb, ib = _mk_list(kb, lead, k)
+    rng = np.random.default_rng(0)
+    ma = rng.random(lead) < 0.5
+    mb = rng.random(lead) < 0.5
+    va_m = np.where(ma[..., None], np.asarray(va), -np.inf).astype(va.dtype)
+    vb_m = np.where(mb[..., None], np.asarray(vb), -np.inf).astype(vb.dtype)
+    for fn in (merge_ref, merge_pallas):
+        v1, i1 = fn(va, ia, vb, ib, valid_a=ma, valid_b=mb)
+        v2, i2 = fn(va_m, ia, vb_m, ib)
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    # one-sided mask, fully-valid rows: a no-op vs the unmasked merge
+    ones = np.ones(lead, bool)
+    v3, _ = merge_pallas(va, ia, vb, ib, valid_b=ones)
+    v0, _ = merge_pallas(va, ia, vb, ib)
+    np.testing.assert_array_equal(np.asarray(v3), np.asarray(v0))
+    # an all-invalid b behaves like merging with the empty list
+    v4, _ = merge_pallas(va, ia, vb, ib, valid_b=~ones)
+    np.testing.assert_array_equal(np.asarray(v4), np.asarray(va))
+
+
 def test_merge_float64_passthrough():
     """float64 lists (the x64 simulator sweep) merge in float64 on both
     the Pallas kernel and the jnp oracle — no silent f32 downcast."""
