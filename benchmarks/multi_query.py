@@ -36,6 +36,11 @@ writes ``BENCH_multi_query.json``:
        "lifetime_s": float, "n_queries": int, "n_trials": int,
        "jax_s": float, "numpy_s": float, "reference_s": float,
        "speedup": float, "vs_batch_numpy": float, "parity": bool},
+      {"suite": "topology_sweep", "topology": str, "latency_model": str,
+       "n_peers": int, "k": int, "n_queries": int, "n_trials": int,
+       "numpy_s": float, "jax_s": float, "vs_numpy": float,
+       "mean_m_bw": float, "mean_response_s": float,
+       "mean_total_bytes": float, "parity": bool},
       {"suite": "tpu", "schedule": str, "k": int, "n_dev": int,
        "n_local": int, "model_bytes": int, "measured_bytes": int,
        "wall_us_per_call": float}
@@ -50,10 +55,14 @@ import time
 
 import numpy as np
 
-from repro.engine import QuerySpec, SimEngine, get_policy
-from repro.p2psim import SimParams, barabasi_albert, run_query_reference
+from repro.engine import NetworkPlan, QuerySpec, SimEngine, get_policy
+from repro.p2psim import (SimParams, available_topologies,
+                          barabasi_albert, build_topology,
+                          run_query_reference)
 
 SIM_POLICIES = ("fd-dynamic", "cn", "cn-star")
+_PARITY_FIELDS = ("n_reached", "n_edges_pq", "m_fw", "m_bw", "m_rt",
+                  "b_fw", "b_bw", "b_rt", "response_time_s", "accuracy")
 
 
 def sim_sweep(fast: bool = False):
@@ -256,6 +265,67 @@ def jax_churn_bench(fast: bool = False):
     return results
 
 
+def topology_sweep(fast: bool = False):
+    """Every registered topology family through BOTH sim backends.
+
+    The ISSUE-5 acceptance measurement: per family the same
+    independent-streams workload runs through the numpy and the jitted
+    JAX engine (one shared ``NetworkPlan``), under the per-edge BRITE
+    latency model wherever the family carries coordinates (``"iid"``
+    for flat BA, which has no embedding) — and entry-wise metric
+    equality between the two backends is ASSERTED (``parity``), at
+    100k-peer scale for the hierarchical family in the full sweep.  The
+    recorded ``mean_m_bw`` / ``mean_response_s`` rows are the
+    cross-family comparison the paper's §5 response-time results can be
+    read against: topology shape (power-law vs. random vs. hierarchical
+    vs. degree-homogeneous) and the distance-derived latencies both
+    move the traffic and latency outcomes.
+
+    The hierarchical family runs at ``n_hier`` (100k full, 20k fast);
+    the flat families at ``n_flat``; Waxman at its O(n^2)-build scale.
+    """
+    n_flat = 2_000 if fast else 20_000
+    n_hier = 20_000 if fast else 100_000
+    nq, nt = 2, 2
+    reps = 2 if fast else 3
+    results = []
+    for name in available_topologies():
+        n_peers = {"hierarchical": n_hier,
+                   "waxman": min(n_flat, 2_000)}.get(name, n_flat)
+        top = build_topology(name, n_peers, seed=7)
+        lm = "edge" if top.coords is not None else "iid"
+        p = SimParams(seed=5, latency_model=lm)
+        spec = QuerySpec(origins=(0, 1), n_trials=nt, seed=5,
+                         rng="independent")
+        plan = NetworkPlan(top)               # shared: one BFS per origin
+        eng_np = SimEngine(plan, p)
+        eng_jx = SimEngine(plan, p, backend="jax")
+        eng_np.run(spec)                      # warm plan + jit caches
+        eng_jx.run(spec)
+        numpy_s = min(_timed(lambda: eng_np.run(spec))
+                      for _ in range(reps))
+        jax_s = min(_timed(lambda: eng_jx.run(spec)) for _ in range(reps))
+        rn = eng_np.run(spec)
+        rj = eng_jx.run(spec)
+        assert rj.backend_used == "sim-jax"
+        parity = all(
+            np.array_equal(getattr(rn.metrics, f), getattr(rj.metrics, f))
+            for f in _PARITY_FIELDS)
+        assert parity, (f"jax backend diverged from numpy on topology "
+                        f"{name!r} ({lm} latency, n={n_peers})")
+        results.append({
+            "suite": "topology_sweep", "topology": name,
+            "latency_model": lm, "n_peers": n_peers, "k": p.k,
+            "n_queries": nq, "n_trials": nt,
+            "numpy_s": numpy_s, "jax_s": jax_s,
+            "vs_numpy": numpy_s / jax_s,
+            "mean_m_bw": float(rn.metrics.m_bw.mean()),
+            "mean_response_s": float(rn.metrics.response_time_s.mean()),
+            "mean_total_bytes": float(rn.metrics.total_bytes.mean()),
+            "parity": parity})
+    return results
+
+
 def tpu_sweep(fast: bool = False):
     import jax
     from repro.core.fd import comm_bytes, fd_topk
@@ -305,7 +375,8 @@ def collect(fast: bool = False) -> dict:
                  "jax": jax.__version__, "numpy": np.__version__},
         "results": (sim_sweep(fast) + speedup_bench(fast)
                     + plan_cache_bench(fast) + jax_backend_bench(fast)
-                    + jax_churn_bench(fast) + tpu_sweep(fast)),
+                    + jax_churn_bench(fast) + topology_sweep(fast)
+                    + tpu_sweep(fast)),
     }
 
 
@@ -340,6 +411,14 @@ def suite_rows():
                          f"/lt={r['lifetime_s']:g}/speedup", r["speedup"],
                          "jitted churn sweep vs scalar reference; "
                          "acceptance: >= 3x"))
+        elif r["suite"] == "topology_sweep":
+            tag = (f"multi_query/topology_sweep/{r['topology']}"
+                   f"/n={r['n_peers']}")
+            rows.append((f"{tag}/m_bw", r["mean_m_bw"],
+                         f"{r['latency_model']} latency; parity="
+                         f"{r['parity']} (acceptance: parity)"))
+            rows.append((f"{tag}/response_s", r["mean_response_s"],
+                         "mean per query"))
         else:
             rows.append((f"multi_query/tpu/{r['schedule']}/k={r['k']}"
                          "/bytes", r["model_bytes"],
@@ -366,12 +445,16 @@ def main() -> None:
     ch = [r for r in data["results"] if r["suite"] == "jax_churn"]
     churn = "; ".join(f"lt={r['lifetime_s']:g}s {r['speedup']:.1f}x"
                       for r in ch)
+    ts = [r for r in data["results"] if r["suite"] == "topology_sweep"]
+    topo = ", ".join(f"{r['topology']}({r['n_peers'] // 1000}k)"
+                     for r in ts)
     print(f"wrote {args.out}: {len(data['results'])} results; "
           f"speedup_vs_loop={sp['speedup']:.1f}x; "
           f"plan_cache warm/cold={pc['speedup']:.2f}x; "
           f"jax_backend {jx['speedup']:.1f}x vs reference "
           f"({jx['vs_batch_numpy']:.2f}x vs batch numpy, "
-          f"n={jx['n_peers']}); jax_churn {churn}")
+          f"n={jx['n_peers']}); jax_churn {churn}; "
+          f"topology_sweep parity on {topo}")
 
 
 if __name__ == "__main__":

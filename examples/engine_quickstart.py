@@ -98,4 +98,27 @@ print("\n[device] fd == global top-k ✓  retrieved rows "
       f"{np.asarray(got.rows).shape}; "
       f"model bytes fd={res.extras['model_bytes']:,} vs "
       f"cn={dev.run(QuerySpec(k=10), 'cn', scores=scores).extras['model_bytes']:,}")
+
+# ---- 5. topology suite: BRITE-style families + per-edge latencies --------
+# (docs/TOPOLOGIES.md has the full catalogue)
+from repro.p2psim import SimParams, available_topologies, build_topology
+
+print(f"\ntopology registry: {', '.join(available_topologies())}")
+hier = build_topology("hierarchical", 2000, seed=7)   # AS-level Waxman
+eng = SimEngine(hier, SimParams(seed=0))              # over router BA
+spec_t = QuerySpec(origins=(0, 1), n_trials=2)
+for lm in ("iid", "edge"):       # paper Table-1 draw vs BRITE distance
+    s = eng.run(QuerySpec(origins=(0, 1), n_trials=2, latency_model=lm),
+                "fd-dynamic")
+    print(f"[{s.topology}] latency_model={s.latency_model:4s} "
+          f"response {s.metrics.response_time_s.mean():.2f} s "
+          f"(m_bw {s.metrics.m_bw.mean():,.0f})")
+# per-edge latencies keep every backend bit-exact, like everything else
+jx = SimEngine(hier, SimParams(seed=0, latency_model="edge"),
+               backend="jax").run(spec_t, "fd-dynamic")
+np_ = SimEngine(hier, SimParams(seed=0, latency_model="edge")).run(
+    spec_t, "fd-dynamic")
+assert np.array_equal(jx.metrics.response_time_s,
+                      np_.metrics.response_time_s)
+print("[topologies] edge-latency model bit-exact numpy == jax ✓")
 print("engine quickstart OK")

@@ -30,7 +30,8 @@ __all__ = ["QuerySpec", "Policy", "TopKResult", "NetworkPlan", "SimEngine",
 
 
 def __getattr__(name):
-    if name == "DeviceEngine":                  # lazy: imports JAX
+    """Resolve the lazy ``DeviceEngine`` export (imports JAX)."""
+    if name == "DeviceEngine":
         from repro.engine.device import DeviceEngine
         return DeviceEngine
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional, Tuple
 from repro.p2psim.metrics import BatchMetrics, QueryMetrics
 
 RNG_MODES = ("shared", "independent")
+LATENCY_MODELS = ("iid", "edge")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,27 +39,43 @@ class QuerySpec:
     ``seeds`` — optional explicit (n_origins, n_trials) integer grid of
     per-entry seeds; implies ``rng="independent"``.
 
+    ``latency_model`` — ``"iid"`` (paper Table 1: per-link N(200 ms,
+    var) draws) or ``"edge"`` (BRITE distance-proportional latencies
+    from the topology's embedding; needs a coordinate-carrying
+    generator, see ``repro.p2psim.topologies``).  ``None`` defers to
+    the engine's ``SimParams.latency_model``.
+
     ``k`` / ``seed`` of None defer to the engine's ``SimParams``.  The
     device backend only reads ``k`` (scores are passed to ``run``).
     """
+
     origins: Tuple[int, ...] = (0,)
     n_trials: int = 1
     k: Optional[int] = None
     seed: Optional[int] = None
     rng: str = "shared"
     seeds: Optional[Any] = None
+    latency_model: Optional[str] = None
 
     def __post_init__(self):
+        """Validate rng / n_trials / latency_model; seeds imply
+        independent streams."""
         if self.rng not in RNG_MODES:
             raise ValueError(f"rng must be one of {RNG_MODES}, "
                              f"got {self.rng!r}")
         if self.n_trials < 1:
             raise ValueError(f"n_trials must be >= 1, got {self.n_trials}")
+        if self.latency_model is not None \
+                and self.latency_model not in LATENCY_MODELS:
+            raise ValueError(
+                f"latency_model must be one of {LATENCY_MODELS} (or "
+                f"None to defer to SimParams), got {self.latency_model!r}")
         if self.seeds is not None and self.rng != "independent":
             object.__setattr__(self, "rng", "independent")
 
     @property
     def independent(self) -> bool:
+        """True when every entry draws from its own RNG stream."""
         return self.rng == "independent"
 
 
@@ -162,11 +179,19 @@ class TopKResult:
     ``fd-stats`` on ``SimEngine(backend="jax")`` runs the numpy
     reference rounds — so tests can assert no SILENT fallback:
     ``assert res.backend_used == res.backend``.
+
+    ``topology`` / ``latency_model`` record WHAT overlay the result was
+    measured on (the topology family's registered ``kind`` and the
+    effective link-latency regime) — the sim backends fill them, the
+    device backend has no overlay and leaves them ``None``.
     """
+
     policy: str
     backend: str                       # "sim" | "sim-jax" | "device"
     k: int
     backend_used: Optional[str] = None
+    topology: Optional[str] = None     # overlay family (sim backends)
+    latency_model: Optional[str] = None  # "iid" | "edge" (sim backends)
     metrics: Optional[BatchMetrics] = None
     values: Any = None
     indices: Any = None
@@ -174,6 +199,7 @@ class TopKResult:
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
+        """Default ``backend_used`` to the constructed backend."""
         if self.backend_used is None:
             self.backend_used = self.backend
 
@@ -185,7 +211,13 @@ class TopKResult:
         return self.metrics.query_metrics(q, t)
 
     def summary(self) -> dict:
+        """Flat scalar summary: identity fields + metric means +
+        scalar extras."""
         out = {"policy": self.policy, "backend": self.backend, "k": self.k}
+        if self.topology is not None:
+            out["topology"] = self.topology
+        if self.latency_model is not None:
+            out["latency_model"] = self.latency_model
         if self.metrics is not None:
             out.update(self.metrics.summary())
         out.update({key: v for key, v in self.extras.items()

@@ -31,6 +31,7 @@ class DeviceEngine:
     def __init__(self, mesh=None, axis: str = "model", *,
                  schedule: str = "halving", batch_axes=None,
                  use_pallas: bool = False):
+        """Build the engine (and bind ``mesh`` when given)."""
         self.axis = axis
         self.schedule = schedule
         self.batch_axes = batch_axes
@@ -48,6 +49,7 @@ class DeviceEngine:
 
     @property
     def axis_size(self) -> int:
+        """Device count along the engine's collective axis."""
         return dict(self.mesh.shape)[self.axis]
 
     def _fn(self, path: str, k: int, algorithm: str):

@@ -5,6 +5,12 @@ computed once and persists across ``SimEngine.run`` calls:
 
   * the CSR adjacency and directed edge arrays (+ sorted membership
     keys for the Strategy-2 edge test);
+  * the per-edge latency array aligned with the CSR (``edge_lat``,
+    coordinate-carrying topologies only) — the deterministic half of
+    the ``latency_model="edge"`` link model, gathered per origin into
+    ``_OriginStatic.par_lat`` and from there per depth level by both
+    sweep backends (it rides inside the ``up_term`` / ``dn_term``
+    arrays the shared RNG precompute emits);
   * per-origin BFS trees, tree levels, children CSR, and forward-phase
     static edge masks (``_OriginStatic``), keyed by (origin, ttl,
     forward strategy);
@@ -76,6 +82,7 @@ class DepthSlices:
     """
 
     def __init__(self, st: _OriginStatic, n: int, reroute: bool = False):
+        """Compile ``st``'s tree into dense slices + fold schedules."""
         self.n = n
         self.origin = st.origin
         self.reroute = False
@@ -200,11 +207,16 @@ class NetworkPlan:
     """Reusable per-topology state shared by every query on an overlay."""
 
     def __init__(self, top: Topology):
+        """Compile the per-topology state (CSR, edges, latency array)."""
         self.top = top
         self.indptr, self.indices = as_csr(top)
         self.e_src, self.e_dst = directed_edges(self.indptr, self.indices)
         self.edge_keys = self.e_src * top.n + self.e_dst  # sorted by constr.
         self.degrees = np.diff(self.indptr)
+        # CSR-aligned per-edge latencies (BRITE distance model); None
+        # for embeddings-free topologies, which support iid only
+        self.edge_lat = (top.edge_latencies(self.e_src, self.e_dst)
+                         if top.coords is not None else None)
         self._statics: Dict[Tuple[int, int, str], _OriginStatic] = {}
         self._auto_ttl: Dict[int, int] = {}
         self._slices: Dict[Tuple[int, int, str], DepthSlices] = {}
@@ -261,7 +273,8 @@ class NetworkPlan:
                 st = _OriginStatic(self.top, self.indptr, self.indices,
                                    self.e_src, self.e_dst, self.edge_keys,
                                    self.degrees, o, ttl, fw_strategy,
-                                   bfs=(P_all[i], D_all[i], R_all[i]))
+                                   bfs=(P_all[i], D_all[i], R_all[i]),
+                                   edge_lat=self.edge_lat)
                 self._statics[(o, ttl, fw_strategy)] = st
                 if ttl == 0:
                     # the full-depth BFS doubles as the TTL resolution
@@ -270,6 +283,7 @@ class NetworkPlan:
         return sts, st_of_q
 
     def cache_info(self) -> dict:
+        """Cache-occupancy counters (statics / auto-TTLs / slices)."""
         return {"origin_statics": len(self._statics),
                 "auto_ttls": len(self._auto_ttl),
                 "depth_slices": len(self._slices)}

@@ -26,8 +26,8 @@ from repro.engine.api import Policy, QuerySpec, TopKResult, get_policy
 from repro.engine.plan import NetworkPlan
 from repro.p2psim.graph import Topology
 from repro.p2psim.metrics import QUERY_BYTES, BatchMetrics, QueryMetrics
-from repro.p2psim.simulate import (SimParams, _run_entries,
-                                   run_query_reference)
+from repro.p2psim.simulate import (SimParams, _latency_mode,
+                                   _run_entries, run_query_reference)
 
 _BM_FIELDS = ("m_bw", "m_rt", "b_bw", "b_rt", "response_time_s", "accuracy")
 
@@ -71,6 +71,7 @@ class SimEngine:
                  params: Optional[SimParams] = None, *,
                  backend: str = "numpy",
                  use_pallas: Optional[bool] = None):
+        """Build the engine (and compile ``top``'s plan when given)."""
         if backend not in ("numpy", "jax"):
             raise ValueError("backend must be 'numpy' or 'jax', "
                              f"got {backend!r}")
@@ -111,6 +112,9 @@ class SimEngine:
             p = dataclasses.replace(p, k=spec.k)
         if spec.seed is not None:
             p = dataclasses.replace(p, seed=spec.seed)
+        if spec.latency_model is not None:
+            p = dataclasses.replace(p, latency_model=spec.latency_model)
+        _latency_mode(self.plan.top, p)   # validate model name + coords
         if pol.algorithm == "fd-stats":
             return self._run_stats(spec, pol, p)
 
@@ -158,7 +162,8 @@ class SimEngine:
         for f in _BM_FIELDS:
             getattr(bm, f)[:] = res[f].reshape(Q, T)
         return TopKResult(policy=pol.name, backend=self.backend, k=p.k,
-                          backend_used=used, metrics=bm)
+                          backend_used=used, topology=self.plan.top.kind,
+                          latency_model=p.latency_model, metrics=bm)
 
     # ---- statistics heuristic (paper §3.3 + Fig 7) ----------------------
 
@@ -214,7 +219,8 @@ class SimEngine:
         reduction = 1.0 - met2.total_bytes / max(met1.total_bytes, 1)
         return TopKResult(
             policy=pol.name, backend=self.backend, k=k,
-            backend_used=used, metrics=_batch_of_one(met2),
+            backend_used=used, topology=top.kind,
+            latency_model=p.latency_model, metrics=_batch_of_one(met2),
             extras={"metrics_full": met1, "metrics_pruned": met2,
                     "comm_reduction": reduction, "accuracy": acc,
                     "z": pol.z})

@@ -61,8 +61,9 @@ from repro.kernels.merge.ops import merge_scorelists
 from repro.p2psim.metrics import ENTRY_BYTES_PAPER
 from repro.p2psim.simulate import (SimParams, _accept_urgent_origin,
                                    _cn_entries, _empty_out,
-                                   _precompute_draws, _reroute_counts,
-                                   _retrieval_exact, _retrieval_shared,
+                                   _entry_latencies, _precompute_draws,
+                                   _reroute_counts, _retrieval_exact,
+                                   _retrieval_shared,
                                    _true_topk_by_origin, wait_time)
 
 
@@ -373,9 +374,13 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
     k = p.k
     list_bytes = k * ENTRY_BYTES_PAPER
     ent_of_st = [np.flatnonzero(ent_st == s) for s in range(S)]
+    # latency_model="edge": the embedding-derived latencies enter here
+    # (inside up_term / dn_term / lat_o, same draws as the numpy
+    # backend), so the jitted sweeps need no edge-vs-iid branch at all
+    par_lat, origin_lat = _entry_latencies(sts, ent_st, p)
     draws = _precompute_draws(ent_origin, seeds, n, p, algorithm,
                               sts[0].fw_strategy, lifetime_mean_s,
-                              independent)
+                              independent, par_lat, origin_lat)
     out = _empty_out(E)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"

@@ -3,6 +3,10 @@ from repro.p2psim.metrics import BatchMetrics, QueryMetrics  # noqa: F401
 from repro.p2psim.simulate import (  # noqa: F401
     SimParams, run_queries, run_query, run_query_reference,
     run_statistics_heuristic)
+from repro.p2psim.topologies import (  # noqa: F401
+    TopologySpec, available_topologies, build_topology, get_topology,
+    gnutella, hierarchical, random_regular, register_topology,
+    small_world)
 
 # Unified engine surface (ISSUE 2), re-exported for one import path.
 # Resolved lazily: repro.engine imports this package's modules, so an

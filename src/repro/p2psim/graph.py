@@ -1,59 +1,110 @@
 """BRITE-like topology generation (paper §5.1).
 
-BRITE's two standard models are implemented:
+BRITE's two flat standard models live here:
   * Barabási–Albert preferential attachment (BRITE "BA") — power-law
     degrees, the shape observed for Gnutella; ``m=2`` gives the paper's
     average degree d(G) ≈ 4 [16].
   * Waxman (BRITE "RTWaxman") — random geometric with exponential
     distance decay.
 
+The full family — BRITE-style two-level hierarchical, Gnutella-like
+rewired power-law, small-world, random-regular — plus the topology
+registry is in :mod:`repro.p2psim.topologies`.
+
 Topologies are connected by construction (BA) or post-connected by
 bridging components (Waxman).
+
+A :class:`Topology` may carry per-node plane coordinates (``coords``),
+which enable BRITE's distance-proportional link-latency model
+(``SimParams.latency_model="edge"``): the latency of a link u–v is
+``lat_base_s + lat_scale_s * ||coords[u] - coords[v]||`` instead of an
+i.i.d. normal draw.  The defaults put the mean pair latency of a
+unit-square embedding near the paper's 200 ms.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class Topology:
+    """One overlay: adjacency lists + optional plane embedding.
+
+    ``coords`` (n, 2), when present, define the per-edge latency model
+    via :meth:`pair_latency`; generators that have no natural embedding
+    (flat BA) leave it ``None`` and support only the i.i.d. latency
+    draw.
+    """
+
     n: int
     neighbors: List[np.ndarray]          # adjacency lists (sorted int32)
     kind: str = "ba"
+    coords: Optional[np.ndarray] = None  # (n, 2) plane positions
+    lat_base_s: float = 0.010            # propagation floor (s)
+    lat_scale_s: float = 0.380           # seconds per unit distance
 
     @property
     def n_edges(self) -> int:
+        """Number of undirected edges."""
         return sum(len(a) for a in self.neighbors) // 2
 
     def degree(self) -> np.ndarray:
+        """(n,) node degrees."""
         return np.array([len(a) for a in self.neighbors])
 
     def avg_degree(self) -> float:
+        """Mean degree d(G)."""
         return 2.0 * self.n_edges / self.n
 
     def edge_set(self):
+        """Yield every undirected edge once as (u, v) with u < v."""
         for u in range(self.n):
             for v in self.neighbors[u]:
                 if u < v:
                     yield (u, int(v))
 
+    def pair_latency(self, u, v) -> np.ndarray:
+        """BRITE-style latency of a (u, v) link from the embedding.
 
-def _to_topology(adj: List[set], kind: str) -> Topology:
+        ``lat_base_s + lat_scale_s * euclidean_distance`` — the
+        distance-proportional propagation delay BRITE assigns to every
+        edge.  ``u`` / ``v`` broadcast (scalar against array is fine);
+        requires ``coords``.
+        """
+        if self.coords is None:
+            raise ValueError(
+                f"topology {self.kind!r} has no node coordinates; the "
+                "per-edge latency model needs a coordinate-carrying "
+                "generator (see repro.p2psim.topologies)")
+        cu = self.coords[u]
+        cv = self.coords[v]
+        d = np.sqrt(((cu - cv) ** 2).sum(axis=-1))
+        return self.lat_base_s + self.lat_scale_s * d
+
+    def edge_latencies(self, e_src: np.ndarray,
+                       e_dst: np.ndarray) -> np.ndarray:
+        """Per-edge latency array aligned with a directed edge list."""
+        return self.pair_latency(e_src, e_dst)
+
+
+def _to_topology(adj: List[set], kind: str,
+                 coords: Optional[np.ndarray] = None) -> Topology:
     return Topology(
         n=len(adj),
         neighbors=[np.array(sorted(a), dtype=np.int32) for a in adj],
-        kind=kind)
+        kind=kind, coords=coords)
 
 
-def barabasi_albert(n: int, m: int = 2, seed: int = 0) -> Topology:
-    """BA preferential attachment; avg degree -> 2m (paper's d(G)=4)."""
-    rng = np.random.default_rng(seed)
+def _ba_adj(n: int, m: int, rng: np.random.Generator) -> List[set]:
+    """BA preferential-attachment adjacency sets (``barabasi_albert``'s
+    exact construction and RNG stream, reusable as a subgraph builder).
+    """
     adj: List[set] = [set() for _ in range(n)]
     # seed clique of m+1 nodes
-    core = m + 1
+    core = min(m + 1, n)
     for u in range(core):
         for v in range(u + 1, core):
             adj[u].add(v)
@@ -72,30 +123,34 @@ def barabasi_albert(n: int, m: int = 2, seed: int = 0) -> Topology:
             adj[u].add(v)
             adj[v].add(u)
             targets.extend([u, v])
-    return _to_topology(adj, "ba")
+    return adj
 
 
-def waxman(n: int, alpha: float = 0.15, beta: float = 0.2,
-           avg_degree: float = 4.0, seed: int = 0) -> Topology:
-    """Waxman: P(u~v) = beta * exp(-d(u,v) / (alpha * L)).
-
-    Edge probability is globally rescaled to hit ``avg_degree``; the
-    result is connected by bridging components along nearest pairs.
-    """
+def barabasi_albert(n: int, m: int = 2, seed: int = 0) -> Topology:
+    """BA preferential attachment; avg degree -> 2m (paper's d(G)=4)."""
     rng = np.random.default_rng(seed)
-    pos = rng.random((n, 2))
+    return _to_topology(_ba_adj(n, m, rng), "ba")
+
+
+def _waxman_adj(pos: np.ndarray, alpha: float, beta: float,
+                avg_degree: float, rng: np.random.Generator) -> List[set]:
+    """Waxman adjacency sets over GIVEN positions (``waxman``'s exact
+    edge-draw + nearest-pair bridging, reusable for the AS level of the
+    hierarchical generator).  O(n^2) memory — flat-overlay scale only.
+    """
+    n = len(pos)
     d = np.sqrt(((pos[:, None] - pos[None]) ** 2).sum(-1))
     L = np.sqrt(2.0)
     p = beta * np.exp(-d / (alpha * L))
     np.fill_diagonal(p, 0.0)
     target_edges = avg_degree * n / 2.0
-    p *= target_edges / (p.sum() / 2.0)
+    p *= target_edges / max(p.sum() / 2.0, 1e-300)
     upper = np.triu(rng.random((n, n)) < p, k=1)
     adj: List[set] = [set() for _ in range(n)]
     for u, v in zip(*np.nonzero(upper)):
         adj[int(u)].add(int(v))
         adj[int(v)].add(int(u))
-    # connect components
+    # connect components along nearest pairs
     comp = _components(adj)
     while len(set(comp)) > 1:
         c0 = np.flatnonzero(comp == comp[0])
@@ -106,7 +161,22 @@ def waxman(n: int, alpha: float = 0.15, beta: float = 0.2,
         adj[u].add(v)
         adj[v].add(u)
         comp = _components(adj)
-    return _to_topology(adj, "waxman")
+    return adj
+
+
+def waxman(n: int, alpha: float = 0.15, beta: float = 0.2,
+           avg_degree: float = 4.0, seed: int = 0) -> Topology:
+    """Waxman: P(u~v) = beta * exp(-d(u,v) / (alpha * L)).
+
+    Edge probability is globally rescaled to hit ``avg_degree``; the
+    result is connected by bridging components along nearest pairs.
+    The draw positions are kept as ``coords``, so Waxman overlays
+    support the per-edge latency model.
+    """
+    rng = np.random.default_rng(seed)
+    pos = rng.random((n, 2))
+    adj = _waxman_adj(pos, alpha, beta, avg_degree, rng)
+    return _to_topology(adj, "waxman", coords=pos)
 
 
 def _components(adj: List[set]) -> np.ndarray:

@@ -56,6 +56,14 @@ class SimParams:
     t_exec_max_s: float = 0.5
     t_slsnd_s: float = 0.5
     seed: int = 0
+    # "iid"  — per-link latency ~ N(latency_mean_s, latency_var), the
+    #          paper's Table-1 draw (default; RNG streams unchanged);
+    # "edge" — per-edge latency from the topology's plane embedding
+    #          (BRITE's distance-proportional delay, see
+    #          Topology.pair_latency); needs a coordinate-carrying
+    #          generator from repro.p2psim.topologies.  Bandwidths stay
+    #          i.i.d. draws in both models.
+    latency_model: str = "iid"
 
 
 # --------------------------------------------------------------------------
@@ -95,6 +103,41 @@ def _draw_link(rng, p: SimParams, size):
     bw = np.maximum(rng.normal(p.bw_mean_Bps, math.sqrt(p.bw_var), size),
                     1_000.0)
     return lat, bw
+
+
+def _draw_bw(rng, p: SimParams, size):
+    """Bandwidth-only draw — the ``latency_model="edge"`` link draw.
+
+    The latency half of ``_draw_link`` is deterministic (the embedding
+    distance), so the stream advances by the bandwidth normals ONLY;
+    every backend uses this same helper, which is what keeps the edge
+    model's streams aligned across reference / numpy / jax.
+    """
+    return np.maximum(rng.normal(p.bw_mean_Bps, math.sqrt(p.bw_var), size),
+                      1_000.0)
+
+
+def _latency_mode(top: Topology, p: SimParams) -> bool:
+    """Validate ``p.latency_model`` against ``top``; True = edge mode."""
+    if p.latency_model not in ("iid", "edge"):
+        raise ValueError(
+            f"latency_model must be 'iid' or 'edge', "
+            f"got {p.latency_model!r}")
+    if p.latency_model == "edge" and top.coords is None:
+        raise ValueError(
+            f"latency_model='edge' needs node coordinates; topology "
+            f"{top.kind!r} has none (use a coordinate-carrying "
+            "generator from repro.p2psim.topologies)")
+    return p.latency_model == "edge"
+
+
+def _tree_edge_latency(top: Topology, parent: np.ndarray) -> np.ndarray:
+    """(n,) latency of each node's tree edge v <-> parent(v) from the
+    embedding (positions without a parent hold the floor value — never
+    read by the sweeps)."""
+    safe = np.maximum(parent, 0)
+    lat = top.pair_latency(np.arange(top.n), safe)
+    return np.where(parent >= 0, lat, top.lat_base_s)
 
 
 # --------------------------------------------------------------------------
@@ -183,6 +226,7 @@ def run_query_reference(top: Topology, origin: int = 0,
     heuristic §3.3); excluded subtrees never receive Q.
     """
     p = params if params is not None else SimParams()
+    edge_lat = _latency_mode(top, p)
     rng = np.random.default_rng(p.seed)
     n = top.n
     pre_bfs = None
@@ -218,8 +262,16 @@ def run_query_reference(top: Topology, origin: int = 0,
     t_exec = n_tuples * p.exec_s_per_tuple
 
     # ---- per-edge link draws (tree edges) ------------------------------
-    lat_up, bw_up = _draw_link(rng, p, n)       # v -> parent(v)
-    lat_dn, bw_dn = _draw_link(rng, p, n)       # parent(v) -> v
+    if edge_lat:
+        # BRITE distance-proportional latency: deterministic per edge
+        # and symmetric (one physical link), bandwidth still drawn per
+        # direction in the iid draw's stream positions
+        par_lat = _tree_edge_latency(top, parent)
+        lat_up, bw_up = par_lat, _draw_bw(rng, p, n)   # v -> parent(v)
+        lat_dn, bw_dn = par_lat, _draw_bw(rng, p, n)   # parent(v) -> v
+    else:
+        lat_up, bw_up = _draw_link(rng, p, n)   # v -> parent(v)
+        lat_dn, bw_dn = _draw_link(rng, p, n)   # parent(v) -> v
 
     # query arrival times down the tree
     t_q = np.full(n, np.inf)
@@ -251,7 +303,12 @@ def run_query_reference(top: Topology, origin: int = 0,
 
     # ---- CN / CN* baselines --------------------------------------------
     if algorithm in ("cn", "cn_star"):
-        lat_o, bw_o = _draw_link(rng, p, n)
+        if edge_lat:
+            # direct originator links: embedding distance origin -> v
+            lat_o = top.pair_latency(origin, np.arange(n))
+            bw_o = _draw_bw(rng, p, n)
+        else:
+            lat_o, bw_o = _draw_link(rng, p, n)
         per_peer = (item_sizes[:, :p.k].sum(1) if algorithm == "cn"
                     else np.full(n, float(list_bytes)))
         alive = death > t_ex_done
@@ -376,7 +433,11 @@ def run_query_reference(top: Topology, origin: int = 0,
     final_owners = np.unique(merged_owner[origin])
     alive_owner = final_owners[death[final_owners] > t_merge_done]
     met.m_rt = 2 * len(alive_owner)
-    lat_o, bw_o = _draw_link(rng, p, len(final_owners))
+    if edge_lat:
+        lat_o = top.pair_latency(origin, final_owners)
+        bw_o = _draw_bw(rng, p, len(final_owners))
+    else:
+        lat_o, bw_o = _draw_link(rng, p, len(final_owners))
     per_owner_counts = np.array(
         [(merged_owner[origin] == o).sum() for o in final_owners])
     fetch_bytes = per_owner_counts * p.item_mean_B
@@ -476,6 +537,10 @@ def _draw_link_batch(rngs, p: SimParams, size):
             np.stack([b for _, b in pairs]))
 
 
+def _draw_bw_batch(rngs, p: SimParams, size):
+    return np.stack([_draw_bw(r, p, size) for r in rngs])
+
+
 def _local_topk_scores_batch(n_tuples: np.ndarray, u: np.ndarray,
                              k: int) -> np.ndarray:
     """Batched ``local_topk_scores`` with pre-drawn uniforms u (T, n, k).
@@ -533,12 +598,17 @@ class EntryDraws:
     lam: Optional[np.ndarray]             # (E, n) st1/st1+2 random wait
     lat_o: Optional[np.ndarray]           # (E, n) cn/cn* originator links
     bw_o: Optional[np.ndarray]
+    # latency_model="edge" only: (E, n) embedding latency origin -> v,
+    # consumed by the retrieval epilogues in place of the iid lat draw
+    origin_lat: Optional[np.ndarray] = None
 
 
 def _precompute_draws(ent_origin: np.ndarray, seeds, n: int, p: SimParams,
                       algorithm: str, fw_strategy: str,
-                      lifetime_mean_s: float,
-                      independent: bool) -> EntryDraws:
+                      lifetime_mean_s: float, independent: bool,
+                      par_lat: Optional[np.ndarray] = None,
+                      origin_lat: Optional[np.ndarray] = None
+                      ) -> EntryDraws:
     """All pre-retrieval draws for a flattened (E,) entry batch.
 
     The order is ``run_query_reference``'s: n_tuples, score uniforms,
@@ -552,6 +622,14 @@ def _precompute_draws(ent_origin: np.ndarray, seeds, n: int, p: SimParams,
     deaths and churn parity reduces to sweep math.  Rerouting itself is
     deterministic in the paper's model (children go to the grandparent),
     so no further draws are needed.
+
+    ``par_lat`` / ``origin_lat`` (both (E, n)) switch the link draws to
+    the ``latency_model="edge"`` regime: latencies are the given
+    embedding-derived values (tree-edge and origin-pair respectively)
+    and only bandwidths are drawn — with ``_draw_bw``, the exact stream
+    the scalar reference consumes in that mode.  Both backends receive
+    the resulting ``up_term`` / ``dn_term`` / ``lat_o`` unchanged, so
+    the latency model never breaks cross-backend bit parity.
     """
     E = len(seeds)
     k = p.k
@@ -570,7 +648,15 @@ def _precompute_draws(ent_origin: np.ndarray, seeds, n: int, p: SimParams,
     scores = (_local_topk_scores_batch(n_tuples, u, k) if exact
               else _local_topk_scores_batch_fast(n_tuples, u, k))
     t_exec = n_tuples * p.exec_s_per_tuple
-    if independent:
+    if par_lat is not None:
+        if independent:
+            bw_up = _draw_bw_batch(rngs, p, n)
+            bw_dn = _draw_bw_batch(rngs, p, n)
+        else:
+            bw_up = _draw_bw(g, p, (E, n))
+            bw_dn = _draw_bw(g, p, (E, n))
+        lat_up = lat_dn = par_lat
+    elif independent:
         lat_up, bw_up = _draw_link_batch(rngs, p, n)
         lat_dn, bw_dn = _draw_link_batch(rngs, p, n)
     else:
@@ -598,7 +684,11 @@ def _precompute_draws(ent_origin: np.ndarray, seeds, n: int, p: SimParams,
                 g.normal(p.item_mean_B, p.item_std_B, (E, n, k)), 64.0)
     lam = lat_o = bw_o = None
     if algorithm in ("cn", "cn_star"):
-        if independent:
+        if origin_lat is not None:
+            lat_o = origin_lat
+            bw_o = (_draw_bw_batch(rngs, p, n) if independent
+                    else _draw_bw(g, p, (E, n)))
+        elif independent:
             lat_o, bw_o = _draw_link_batch(rngs, p, n)
         else:
             lat_o, bw_o = _draw_link(g, p, (E, n))
@@ -611,15 +701,24 @@ def _precompute_draws(ent_origin: np.ndarray, seeds, n: int, p: SimParams,
         exact=exact, rngs=rngs, n_tuples=n_tuples, scores=scores,
         t_exec=t_exec, up_term=lat_up + list_bytes / bw_up,
         dn_term=lat_dn + QUERY_BYTES / bw_dn, death=death,
-        item_sizes=item_sizes, lam=lam, lat_o=lat_o, bw_o=bw_o)
+        item_sizes=item_sizes, lam=lam, lat_o=lat_o, bw_o=bw_o,
+        origin_lat=origin_lat)
 
 
 class _OriginStatic:
-    """Trial-independent per-origin state (shared by all trials)."""
+    """Trial-independent per-origin state (shared by all trials).
+
+    ``edge_lat`` — the plan's CSR-aligned per-edge latency array
+    (present when the topology carries coordinates): gathered here into
+    ``par_lat`` (each node's tree-edge latency, the deterministic half
+    of the ``latency_model="edge"`` link draws) and complemented by
+    ``origin_lat`` (embedding latency origin -> v for the direct
+    retrieval / CN originator links).
+    """
 
     def __init__(self, top: Topology, indptr, indices, e_src, e_dst,
                  edge_keys, degrees, origin: int, ttl: int,
-                 fw_strategy: str, bfs=None):
+                 fw_strategy: str, bfs=None, edge_lat=None):
         n = top.n
         if bfs is not None:           # precomputed by the multi-origin BFS
             parent, depth, reached = bfs
@@ -650,6 +749,16 @@ class _OriginStatic:
                                & reached[e_dst]).sum())
         self.avg_degree = float(np.mean(degrees[self.idx]))
 
+        # ---- per-edge latency gathers (latency_model="edge") -----------
+        if edge_lat is not None:
+            self.par_lat = np.full(n, top.lat_base_s)
+            ch = self.idx[parent[self.idx] >= 0]
+            pos = np.searchsorted(edge_keys, ch * n + parent[ch])
+            self.par_lat[ch] = edge_lat[pos]
+            self.origin_lat = top.pair_latency(origin, np.arange(n))
+        else:
+            self.par_lat = self.origin_lat = None
+
         # ---- forward-phase static masks --------------------------------
         mask_u = reached & (self.ttl_rem > 0)
         self.m_basic = int(degrees[mask_u].sum() - mask_u.sum()
@@ -679,6 +788,20 @@ class _OriginStatic:
         self.fw_cond = ((parent[self.fw_els_src] == self.fw_els_dst)
                         | (depth[self.fw_els_dst]
                            <= depth[self.fw_els_src]))
+
+
+def _entry_latencies(sts, ent_st: np.ndarray, p: SimParams):
+    """(par_lat, origin_lat) as (E, n) entry-expanded arrays, or (None,
+    None) in the default iid model (backend-shared helper)."""
+    if p.latency_model != "edge":
+        return None, None
+    if sts[0].par_lat is None:
+        raise ValueError(
+            "latency_model='edge' needs node coordinates; this "
+            "topology has none (use a coordinate-carrying generator "
+            "from repro.p2psim.topologies)")
+    return (np.stack([st.par_lat for st in sts])[ent_st],
+            np.stack([st.origin_lat for st in sts])[ent_st])
 
 
 def _topk_remerge(mvals_row, mown_row, extra_v, extra_o, k):
@@ -718,9 +841,10 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     ent_of_st = [np.flatnonzero(ent_st == s) for s in range(S)]
 
     # ---- RNG draws, run_query's exact order (shared by all backends) ----
+    par_lat, origin_lat = _entry_latencies(sts, ent_st, p)
     draws = _precompute_draws(ent_origin, seeds, n, p, algorithm,
                               sts[0].fw_strategy, lifetime_mean_s,
-                              independent)
+                              independent, par_lat, origin_lat)
     scores, t_exec, death = draws.scores, draws.t_exec, draws.death
 
     # ---- level row sets: (entry, node, parent, kid-slice) per depth -----
@@ -1057,7 +1181,11 @@ def _retrieval_exact(out: dict, draws: EntryDraws, ent_origin: np.ndarray,
         final_owners = np.unique(mown[e, origin])
         alive_own = death[e, final_owners] > t_merge_done[e]
         out["m_rt"][e] = 2 * int(alive_own.sum())
-        lat_o, bw_o = _draw_link(rngs[e], p, len(final_owners))
+        if draws.origin_lat is None:
+            lat_o, bw_o = _draw_link(rngs[e], p, len(final_owners))
+        else:
+            lat_o = draws.origin_lat[e, final_owners]
+            bw_o = _draw_bw(rngs[e], p, len(final_owners))
         per_owner_counts = np.array(
             [(mown[e, origin] == o).sum() for o in final_owners])
         fetch_bytes = per_owner_counts * p.item_mean_B
@@ -1101,7 +1229,11 @@ def _retrieval_shared(out: dict, draws: EntryDraws,
     fetch_total = alive_elem.sum(axis=1) * p.item_mean_B
     out["b_rt"][:] = (alive_owner_cnt * p.request_B
                       + fetch_total).astype(np.int64)
-    lat_o, bw_o = _draw_link(draws.rngs[0], p, (E, k))   # per owner slot
+    if draws.origin_lat is None:
+        lat_o, bw_o = _draw_link(draws.rngs[0], p, (E, k))  # per owner slot
+    else:                        # edge model: owner latency deterministic
+        lat_o = draws.origin_lat[ar[:, None], mo]
+        bw_o = _draw_bw(draws.rngs[0], p, (E, k))
     t_f = 2 * lat_o + (p.request_B + count_elem * p.item_mean_B) / bw_o
     t_max = np.where(firstocc & alive_elem, t_f, -np.inf).max(axis=1)
     out["response_time_s"][:] = t_merge_done + np.where(

@@ -1,0 +1,277 @@
+"""Topology suite (ISSUE 5): registry surface, generator invariants,
+hierarchical auto-TTL agreement, and per-edge latency-model parity
+across the scalar reference and BOTH SimEngine backends.
+
+The parity contract extends the engine's existing one: with
+``latency_model="edge"`` (BRITE distance-proportional link latencies
+from the topology's embedding) every backend still reproduces
+``run_query_reference`` bit-for-bit in every RNG mode — the
+deterministic latencies ride inside the SAME shared draw arrays, so
+nothing about the cross-backend story changes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.engine import NetworkPlan, QuerySpec, SimEngine, get_policy
+from repro.p2psim import (SimParams, TopologySpec, available_topologies,
+                          barabasi_albert, build_topology, get_topology,
+                          register_topology, run_query_reference)
+from repro.p2psim.graph import (as_csr, bfs_tree, directed_edges,
+                                eccentricity_ttl)
+
+ALL_FAMILIES = ("ba", "waxman", "hierarchical", "gnutella",
+                "small-world", "random-regular")
+
+# one shared hierarchical overlay for the engine-parity tests (small:
+# keeps the per-tree jit compiles fast)
+HTOP = build_topology("hierarchical", 260, seed=3)
+PA_EDGE = SimParams(seed=11, latency_model="edge")
+
+_PARITY_FIELDS = ("n_reached", "n_edges_pq", "m_fw", "m_bw", "m_rt",
+                  "b_fw", "b_bw", "b_rt", "response_time_s", "accuracy")
+
+
+def _legacy_kwargs(pol):
+    import math
+    kw = dict(algorithm=pol.algorithm, strategy=pol.strategy,
+              dynamic=pol.dynamic)
+    if not math.isinf(pol.lifetime_mean_s):
+        kw["lifetime_mean_s"] = pol.lifetime_mean_s
+    return kw
+
+
+# --------------------------------------------------------------------------
+# registry surface
+# --------------------------------------------------------------------------
+
+def test_registry_surface():
+    assert set(available_topologies()) >= set(ALL_FAMILIES)
+    with pytest.raises(KeyError):
+        get_topology("torus-nope")
+    with pytest.raises(ValueError):
+        register_topology(TopologySpec("ba", barabasi_albert, regime=""))
+    spec = get_topology("hierarchical")
+    assert get_topology(spec) is spec         # spec passes through
+    assert "BRITE" in spec.regime
+    # defaults merge with overrides
+    top = build_topology("random-regular", 30, seed=1, d=6)
+    assert (top.degree() == 6).all()
+
+
+# --------------------------------------------------------------------------
+# generator invariants: connectivity, simplicity, embedding
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_family_connected_and_simple(name):
+    for seed in (0, 7):
+        n = 150 if name == "waxman" else 400
+        top = build_topology(name, n, seed=seed)
+        assert top.n == n and top.kind == name
+        _, _, reached = bfs_tree(top, 0, top.n)
+        assert reached.all(), f"{name} seed={seed} disconnected"
+        for u in range(top.n):
+            nb = top.neighbors[u]
+            assert len(np.unique(nb)) == len(nb)          # no multi-edges
+            assert u not in nb                            # no self-loops
+            assert all(u in top.neighbors[int(v)] for v in nb)  # symmetric
+        if name == "ba":
+            assert top.coords is None     # flat BA has no embedding
+        else:
+            assert top.coords is not None and top.coords.shape == (n, 2)
+
+
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_family_degree_distribution(name):
+    n = 150 if name == "waxman" else 500
+    top = build_topology(name, n, seed=7)
+    degs = top.degree()
+    assert 2.0 < top.avg_degree() < 8.0       # paper regime: d(G) ~ 4
+    if name in ("ba", "gnutella", "hierarchical"):
+        # power-law core: heavy tail far above the mean
+        assert degs.max() >= 3 * top.avg_degree(), name
+    if name == "small-world":
+        assert degs.max() <= 4 + 6            # lattice + few rewires
+    if name == "random-regular":
+        assert (degs == 4).all()              # exactly d-regular
+
+
+def test_random_regular_validation():
+    with pytest.raises(ValueError):
+        build_topology("random-regular", 30, d=3)       # odd d
+    with pytest.raises(ValueError):
+        build_topology("random-regular", 4, d=4)        # n <= d
+
+
+def test_hierarchical_structure():
+    top = build_topology("hierarchical", 600, seed=5, n_as=6)
+    assert (top.coords >= 0).all() and (top.coords <= 1).all()
+    # two-level latency structure: plenty of short intra-AS links AND
+    # some long inter-AS gateway links
+    indptr, indices = as_csr(top)
+    lat = top.edge_latencies(*directed_edges(indptr, indices))
+    assert np.median(lat) < 0.08              # intra-AS dominates
+    assert lat.max() > 0.10                   # gateways span ASes
+
+
+# --------------------------------------------------------------------------
+# auto-TTL agreement on hierarchical graphs (plan vs scalar path)
+# --------------------------------------------------------------------------
+
+def test_hierarchical_auto_ttl_plan_vs_scalar_agreement():
+    for top in (HTOP, build_topology("hierarchical", 500, seed=9)):
+        plan = NetworkPlan(top)
+        for origin in (0, top.n // 2, top.n - 1):
+            assert plan.auto_ttl(origin) == eccentricity_ttl(top, origin)
+        sts, _ = plan.origin_statics(np.array([0, top.n - 1]), 0, "st1+2")
+        assert sts[0].ttl == plan.auto_ttl(0)
+        assert sts[1].ttl == plan.auto_ttl(top.n - 1)
+
+
+# --------------------------------------------------------------------------
+# per-edge latency model: values + plan plumbing
+# --------------------------------------------------------------------------
+
+def test_pair_latency_formula_and_plan_alignment():
+    top = HTOP
+    u, v = 0, int(top.neighbors[0][0])
+    d = float(np.sqrt(((top.coords[u] - top.coords[v]) ** 2).sum()))
+    assert top.pair_latency(u, v) == top.lat_base_s + top.lat_scale_s * d
+    # NetworkPlan.edge_lat is aligned with the directed edge arrays
+    plan = NetworkPlan(top)
+    assert plan.edge_lat is not None
+    np.testing.assert_array_equal(
+        plan.edge_lat, top.pair_latency(plan.e_src, plan.e_dst))
+    # ... and the per-origin gather holds the tree-edge latency
+    sts, _ = plan.origin_statics(np.array([0]), 0, "st1+2")
+    st = sts[0]
+    child = int(st.idx[st.parent[st.idx] >= 0][0])
+    assert st.par_lat[child] == top.pair_latency(child,
+                                                 int(st.parent[child]))
+    # embeddings-free topologies have no latency arrays
+    assert NetworkPlan(barabasi_albert(40)).edge_lat is None
+    with pytest.raises(ValueError):
+        barabasi_albert(40).pair_latency(0, 1)
+
+
+# --------------------------------------------------------------------------
+# latency-model parity: reference == numpy == jax, every RNG mode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,lifetime", [
+    ("fd-st1+2", None), ("fd-dynamic", None), ("cn-star", None),
+    ("fd-dynamic", 25.0),                     # churn draws shift position
+])
+def test_edge_latency_parity_all_backends(name, lifetime):
+    """With latency_model="edge", both engine backends reproduce the
+    scalar reference bit-for-bit (shared batch of one, independent
+    streams) and each other (shared stream, batch > 1)."""
+    pol = get_policy(name)
+    if lifetime is not None:
+        pol = pol.variant(lifetime_mean_s=lifetime)
+    kw = _legacy_kwargs(pol)
+    plan = NetworkPlan(HTOP)
+    en = SimEngine(plan, PA_EDGE)
+    ej = SimEngine(plan, PA_EDGE, backend="jax")
+    # shared batch of one == scalar reference
+    met, _ = run_query_reference(HTOP, 5, dataclasses.replace(
+        PA_EDGE, seed=2), **kw)
+    for eng in (en, ej):
+        res = eng.run(QuerySpec(origins=(5,), seed=2), pol)
+        assert res.query_metrics(0, 0) == met, eng.backend
+        assert res.topology == "hierarchical"
+        assert res.latency_model == "edge"
+    # independent streams: entry-wise reference parity
+    spec = QuerySpec(origins=(0, 7), n_trials=2, rng="independent")
+    rn, rj = en.run(spec, pol), ej.run(spec, pol)
+    assert rj.backend_used == "sim-jax"
+    for q, o in enumerate((0, 7)):
+        for t in range(2):
+            met, _ = run_query_reference(
+                HTOP, o,
+                dataclasses.replace(PA_EDGE, seed=PA_EDGE.seed + q * 2 + t),
+                **kw)
+            assert rn.query_metrics(q, t) == met, (name, "numpy", q, t)
+            assert rj.query_metrics(q, t) == met, (name, "jax", q, t)
+    # shared stream, batch > 1: full cross-backend equality
+    spec = QuerySpec(origins=(1, 8), n_trials=3)
+    ra, rb = en.run(spec, pol).metrics, ej.run(spec, pol).metrics
+    for f in _PARITY_FIELDS:
+        np.testing.assert_array_equal(getattr(ra, f), getattr(rb, f),
+                                      err_msg=f"{name}: {f}")
+
+
+@pytest.mark.parametrize("family", ("ba", "small-world",
+                                    "random-regular", "gnutella",
+                                    "waxman"))
+def test_every_family_through_both_backends(family):
+    """Acceptance: EVERY registered family runs through the numpy AND
+    jax backends with entry-wise identical metrics in every RNG mode,
+    under its native latency model ("iid" for embedding-free flat BA;
+    the hierarchical family is covered exhaustively above)."""
+    n = 120 if family == "waxman" else 200
+    top = build_topology(family, n, seed=4)
+    lm = "iid" if top.coords is None else "edge"
+    pa = SimParams(seed=11, latency_model=lm)
+    plan = NetworkPlan(top)
+    en = SimEngine(plan, pa)
+    ej = SimEngine(plan, pa, backend="jax")
+    # shared batch of one: backends == scalar reference
+    met, _ = run_query_reference(top, 1, pa)
+    for eng in (en, ej):
+        res = eng.run(QuerySpec(origins=(1,)))
+        assert res.query_metrics(0, 0) == met, eng.backend
+        assert res.topology == family and res.latency_model == lm
+    # independent streams AND shared batch > 1: numpy == jax entrywise
+    for spec in (QuerySpec(origins=(0, 1), n_trials=2,
+                           rng="independent"),
+                 QuerySpec(origins=(0, 1), n_trials=2)):
+        rn, rj = en.run(spec), ej.run(spec)
+        assert rj.backend_used == "sim-jax"
+        for f in _PARITY_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(rn.metrics, f), getattr(rj.metrics, f),
+                err_msg=f"{family}/{spec.rng}: {f}")
+
+
+def test_latency_model_validation_and_result_fields():
+    with pytest.raises(ValueError):
+        QuerySpec(latency_model="gaussian")
+    with pytest.raises(ValueError):
+        run_query_reference(barabasi_albert(40),
+                            params=SimParams(latency_model="nope"))
+    # an invalid model smuggled in via SimParams is rejected by the
+    # engine too — never silently run as iid
+    with pytest.raises(ValueError):
+        SimEngine(HTOP, SimParams(latency_model="Edge")).run(QuerySpec())
+    # edge mode demands an embedding, at both entry points
+    ba = barabasi_albert(60, seed=1)
+    with pytest.raises(ValueError):
+        run_query_reference(ba, params=SimParams(latency_model="edge"))
+    with pytest.raises(ValueError):
+        SimEngine(ba).run(QuerySpec(origins=(0,), latency_model="edge"))
+    # the iid default is recorded too, and the models actually differ
+    r_iid = SimEngine(HTOP, SimParams(seed=11)).run(QuerySpec(origins=(0,)))
+    assert r_iid.topology == "hierarchical"
+    assert r_iid.latency_model == "iid"
+    r_edge = SimEngine(HTOP, PA_EDGE).run(QuerySpec(origins=(0,)))
+    assert (r_iid.metrics.response_time_s[0, 0]
+            != r_edge.metrics.response_time_s[0, 0])
+    s = r_edge.summary()
+    assert s["topology"] == "hierarchical" and s["latency_model"] == "edge"
+    # the QuerySpec override beats the engine's SimParams
+    r = SimEngine(HTOP, SimParams(seed=11)).run(
+        QuerySpec(origins=(0,), latency_model="edge"))
+    assert r.latency_model == "edge"
+    assert (r.metrics.response_time_s[0, 0]
+            == r_edge.metrics.response_time_s[0, 0])
+
+
+def test_edge_latency_fd_stats_policy():
+    """The two-round fd-stats heuristic threads the latency model
+    through both reference rounds."""
+    res = SimEngine(HTOP, PA_EDGE).run(QuerySpec(origins=(0,)), "fd-stats")
+    assert res.latency_model == "edge" and res.topology == "hierarchical"
+    assert res.extras["comm_reduction"] > 0.0

@@ -1,0 +1,109 @@
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Scans the given markdown files / directories for inline links and
+validates every RELATIVE target:
+
+  * ``[text](path)``          — the file (or directory) must exist,
+    resolved against the markdown file's own directory;
+  * ``[text](path#anchor)`` / ``[text](#anchor)`` — the target file
+    must additionally contain a heading whose GitHub slug matches
+    ``anchor``.
+
+External links (``http(s)://``, ``mailto:``) are counted but not
+fetched — network checks are flaky in CI and the repo's externals are
+badges and paper references.
+
+  python tools/check_links.py README.md docs
+
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline links, skipping fenced code blocks and images' leading "!"
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^\s*(```|~~~)")
+_HEADING = re.compile(r"^\s{0,3}#{1,6}\s+(.*?)\s*#*\s*$")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug of a heading line."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)        # strip code spans
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # inline links
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def _headings(path: pathlib.Path) -> set:
+    slugs: dict = {}
+    fenced = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if _FENCE.match(line):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        m = _HEADING.match(line)
+        if m:
+            base = _slug(m.group(1))
+            n = slugs.get(base, 0)
+            slugs[base] = n + 1
+            # duplicate headings get -1, -2, ... suffixes on GitHub
+    out = set()
+    for base, count in slugs.items():
+        out.add(base)
+        out.update(f"{base}-{i}" for i in range(1, count))
+    return out
+
+
+def _links(path: pathlib.Path):
+    fenced = False
+    for ln, line in enumerate(path.read_text(encoding="utf-8")
+                              .splitlines(), 1):
+        if _FENCE.match(line):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        for m in _LINK.finditer(line):
+            yield ln, m.group(1)
+
+
+def check(paths) -> int:
+    md_files = []
+    for p in paths:
+        p = pathlib.Path(p)
+        md_files.extend(sorted(p.rglob("*.md")) if p.is_dir() else [p])
+    errors = []
+    n_links = n_external = 0
+    for md in md_files:
+        for ln, target in _links(md):
+            n_links += 1
+            if re.match(r"[a-z][a-z0-9+.-]*:", target):   # URL scheme
+                n_external += 1
+                continue
+            raw, _, anchor = target.partition("#")
+            dest = (md.parent / raw).resolve() if raw else md.resolve()
+            if not dest.exists():
+                errors.append(f"{md}:{ln}: broken link -> {target}")
+                continue
+            if anchor:
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    errors.append(f"{md}:{ln}: anchor on non-markdown "
+                                  f"target -> {target}")
+                elif _slug(anchor) not in _headings(dest):
+                    errors.append(f"{md}:{ln}: missing anchor -> "
+                                  f"{target}")
+    print(f"checked {n_links} links in {len(md_files)} files "
+          f"({n_external} external, skipped)")
+    for e in errors:
+        print(e, file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1:] or ["README.md", "docs"]))
