@@ -17,9 +17,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.p2psim import SimParams, barabasi_albert, run_query
+from repro.engine import (QuerySpec, SimEngine, get_policy,
+                          policy_from_legacy)
+from repro.p2psim import SimParams, barabasi_albert
 from repro.p2psim.graph import eccentricity_ttl
-from repro.p2psim.simulate import run_statistics_heuristic
 
 WAN = SimParams(seed=0)
 CLUSTER = SimParams(seed=0, latency_mean_s=0.0005, latency_var=1e-8,
@@ -30,10 +31,27 @@ def _top(n, seed=0):
     return barabasi_albert(n, m=2, seed=seed)
 
 
+def _run(engine, origin, params=None, **legacy):
+    """One query via the engine API; returns its ``QueryMetrics``.
+
+    ``legacy`` holds the old run_query knobs (algorithm / strategy /
+    dynamic / lifetime_mean_s) mapped onto a registry policy.  Reusing
+    one ``engine`` per topology amortizes the compiled ``NetworkPlan``
+    across every policy a figure sweeps.
+    """
+    pol = policy_from_legacy(
+        legacy.pop("algorithm", "fd"), legacy.pop("strategy", "st1+2"),
+        legacy.pop("dynamic", True),
+        legacy.pop("lifetime_mean_s", float("inf")))
+    assert not legacy, f"unknown knobs: {legacy}"
+    res = engine.run(QuerySpec(origins=(int(origin),)), pol, params=params)
+    return res.metrics.query_metrics(0, 0)
+
+
 def fig2_cluster_scaleup():
     rows = []
     for n in (8, 16, 32, 64):
-        met, _ = run_query(_top(n), 0, CLUSTER)
+        met = _run(SimEngine(_top(n), CLUSTER), 0)
         rows.append((f"fig2/resp_s/n={n}", met.response_time_s, "fd-cluster"))
     # paper: logarithmic scale-up -> resp(64)/resp(8) well below 64/8
     r8 = rows[0][1]
@@ -46,9 +64,9 @@ def fig2_cluster_scaleup():
 def fig3_scaleup_vs_baselines():
     rows = []
     for n in (100, 500, 1000, 2500, 5000):
-        top = _top(n)
+        eng = SimEngine(_top(n), WAN)
         for alg in ("fd", "cn", "cn_star"):
-            met, _ = run_query(top, 0, WAN, algorithm=alg)
+            met = _run(eng, 0, algorithm=alg)
             rows.append((f"fig3/resp_s/{alg}/n={n}", met.response_time_s,
                          "paper: FD lowest, gap grows with n"))
     return rows
@@ -56,11 +74,12 @@ def fig3_scaleup_vs_baselines():
 
 def fig4_bandwidth():
     rows = []
+    eng = SimEngine(_top(1000), WAN)
     for kbps in (28, 56, 112, 256, 1024):
         p = dataclasses.replace(WAN, bw_mean_Bps=kbps * 1000 / 8,
                                 bw_var=(kbps * 250 / 8) ** 2)
         for alg in ("fd", "cn", "cn_star"):
-            met, _ = run_query(_top(1000), 0, p, algorithm=alg)
+            met = _run(eng, 0, p, algorithm=alg)
             rows.append((f"fig4/resp_s/{alg}/bw={kbps}kbps",
                          met.response_time_s,
                          "paper: resp falls with bw; FD lowest"))
@@ -69,11 +88,12 @@ def fig4_bandwidth():
 
 def fig5_latency():
     rows = []
+    eng = SimEngine(_top(1000), WAN)
     for ms in (50, 200, 500, 1000, 2000):
         p = dataclasses.replace(WAN, latency_mean_s=ms / 1000,
                                 latency_var=(ms / 2000) ** 2)
         for alg in ("fd", "cn", "cn_star"):
-            met, _ = run_query(_top(1000), 0, p, algorithm=alg)
+            met = _run(eng, 0, p, algorithm=alg)
             rows.append((f"fig5/resp_s/{alg}/lat={ms}ms",
                          met.response_time_s,
                          "paper: latency hits FD harder than CN; "
@@ -84,10 +104,10 @@ def fig5_latency():
 def fig6_comm_cost():
     rows = []
     for n in (500, 1000, 2500, 5000, 10000):
-        top = _top(n)
+        eng = SimEngine(_top(n), WAN)
         vals = {}
         for strat in ("basic", "st1", "st1+2"):
-            met, _ = run_query(top, 0, WAN, strategy=strat, dynamic=False)
+            met = _run(eng, 0, strategy=strat, dynamic=False)
             vals[strat] = met.total_bytes
             rows.append((f"fig6/bytes/{strat}/n={n}", met.total_bytes,
                          "paper@10k: basic~5MB, str1+2~3.5MB (~30% cut)"))
@@ -99,9 +119,11 @@ def fig6_comm_cost():
 
 def fig7_statistics():
     rows = []
-    top = _top(1000)
+    eng = SimEngine(_top(1000), WAN)
     for z in (0.0, 0.2, 0.4, 0.6, 0.8, 1.0):
-        _, _, red, acc = run_statistics_heuristic(top, 0, WAN, z=z)
+        ex = eng.run(QuerySpec(origins=(0,)),
+                     get_policy("fd-stats").variant(z=z)).extras
+        red, acc = ex["comm_reduction"], ex["accuracy"]
         rows.append((f"fig7/accuracy/z={z}", acc,
                      "paper: z=0.8 -> acc>0.90"))
         rows.append((f"fig7/comm_reduction/z={z}", red,
@@ -111,15 +133,15 @@ def fig7_statistics():
 
 def fig8_dynamicity():
     rows = []
-    top = _top(1000)
+    eng = SimEngine(_top(1000), WAN)
     for lt_min in (0.5, 1, 2, 4, 15, 60):
         accs_b, accs_d = [], []
         for seed in range(3):
             p = dataclasses.replace(WAN, seed=seed)
-            mb, _ = run_query(top, 0, p, dynamic=False,
-                              lifetime_mean_s=lt_min * 60)
-            md, _ = run_query(top, 0, p, dynamic=True,
-                              lifetime_mean_s=lt_min * 60)
+            mb = _run(eng, 0, p, dynamic=False,
+                      lifetime_mean_s=lt_min * 60)
+            md = _run(eng, 0, p, dynamic=True,
+                      lifetime_mean_s=lt_min * 60)
             accs_b.append(mb.accuracy)
             accs_d.append(md.accuracy)
         rows.append((f"fig8/acc_basic/lifetime={lt_min}min",
@@ -133,14 +155,15 @@ def lemma_table():
     rows = []
     top = _top(2000)
     pa = dataclasses.replace(WAN, ttl=eccentricity_ttl(top, 0) + 1)
-    met_b, _ = run_query(top, 0, pa, strategy="basic", dynamic=False)
+    eng = SimEngine(top, pa)
+    met_b = _run(eng, 0, strategy="basic", dynamic=False)
     degs = top.degree()
     exact1 = int(degs.sum() - met_b.n_reached + 1)
     rows.append(("lemma1/m_fw_basic", met_b.m_fw, f"exact={exact1}"))
-    met_1, _ = run_query(top, 0, pa, strategy="st1", dynamic=False)
+    met_1 = _run(eng, 0, strategy="st1", dynamic=False)
     rows.append(("lemma3/m_fw_st1", met_1.m_fw,
                  f"|E|={met_b.n_edges_pq} (w.h.p. equal)"))
-    met_12, _ = run_query(top, 0, pa, strategy="st1+2", dynamic=False)
+    met_12 = _run(eng, 0, strategy="st1+2", dynamic=False)
     rows.append(("thm1/m_fw_st1+2", met_12.m_fw,
                  f"<=|E|={met_b.n_edges_pq}"))
     rows.append(("lemma2/lower_bound", met_b.n_reached - 1,

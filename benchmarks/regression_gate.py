@@ -30,6 +30,19 @@ hierarchical overlay in the full sweep) — their ``vs_numpy`` ratio is
 recorded but not gated, because the two backends land near parity on
 CI CPUs and the ratio is pure noise there.
 
+The ``serving`` rows (ISSUE 6, produced by ``benchmarks/loadgen.py``
+into ``BENCH_serving.json``) gate the always-on QueryServer: their
+value field is absolute ``throughput_qps`` rather than a speedup ratio
+(floor 25 qps — CI-runner safe; the relative band is widened to 50%
+because wall-clock throughput on shared 2-core runners swings far more
+than compute ratios; ``backend: "jax"`` rows are parity+batched-only,
+their wall clock being XLA-compile-dominated on CI), and every row
+must carry BOTH the ``parity`` bit
+(served results bit-exact vs one-at-a-time ``Engine.run()``) and the
+``batched`` bit (dynamic batching actually fused > 1 request) — a
+server that serves correct bits without ever coalescing fails the
+gate, as does one that batches fast but wrong.
+
 Rows are matched on (suite + identity params); a baseline acceptance
 row with no matching current row is itself a failure, so suites cannot
 silently disappear.
@@ -37,6 +50,10 @@ silently disappear.
   PYTHONPATH=src python -m benchmarks.regression_gate \
       --current BENCH_multi_query.json \
       --baseline benchmarks/baselines/BENCH_multi_query.fast.json
+
+  PYTHONPATH=src python -m benchmarks.regression_gate \
+      --current BENCH_serving.json \
+      --baseline benchmarks/baselines/BENCH_serving.fast.json
 """
 from __future__ import annotations
 
@@ -52,10 +69,17 @@ _KEYS = {
     "jax_churn": ("n_peers", "k", "lifetime_s", "n_queries", "n_trials"),
     "topology_sweep": ("topology", "latency_model", "n_peers", "k",
                        "n_queries", "n_trials"),
+    "serving": ("backend", "concurrency", "n_requests"),
 }
 _FLOORS = {"speedup": 10.0, "plan_cache": 1.0, "jax_backend": 3.0,
-           "jax_churn": 3.0}
-_PARITY_SUITES = ("jax_backend", "jax_churn", "topology_sweep")
+           "jax_churn": 3.0, "serving": 25.0}
+_PARITY_SUITES = ("jax_backend", "jax_churn", "topology_sweep",
+                  "serving")
+# gated value field per suite (default: the "speedup" ratio); serving
+# rows gate an absolute throughput instead
+_VALUE_FIELD = {"serving": "throughput_qps"}
+# required boolean bits beyond parity
+_REQUIRED_BITS = {"serving": ("batched",)}
 # suites gated on presence + parity only (no speedup floor/band): the
 # numpy-vs-jax ratio on CI CPUs is noise, the bit-exactness is the
 # contract
@@ -65,7 +89,14 @@ _PARITY_ONLY = ("topology_sweep",)
 # default 20% band (observed 6.1x-8.5x for the same build), so the
 # relative check uses a wider band there; the absolute 3x floor and the
 # parity bit still gate every run
-_SUITE_TOLERANCE = {"jax_churn": 0.40}
+_SUITE_TOLERANCE = {"jax_churn": 0.40, "serving": 0.50}
+
+
+def _parity_only(suite: str, row: dict) -> bool:
+    """Rows gated on their boolean bits only (no value floor/band)."""
+    if suite in _PARITY_ONLY:
+        return True
+    return suite == "serving" and row.get("backend") == "jax"
 
 
 def _rows(path: str) -> dict:
@@ -91,24 +122,34 @@ def check(current: str, baseline: str, tolerance: float) -> list:
             failures.append(f"{tag}: acceptance row missing from "
                             f"{current}")
             continue
-        if suite in _PARITY_ONLY:
+        if _parity_only(suite, crow):
             ok = crow.get("parity", False)
             print(f"{tag}: parity={ok} {'ok' if ok else 'FAIL'}")
             if not ok:
                 failures.append(f"{tag}: backend parity bit not set")
+            for bit in _REQUIRED_BITS.get(suite, ()):
+                if not crow.get(bit, False):
+                    failures.append(
+                        f"{tag}: required bit {bit!r} not set")
             continue
-        got, ref = crow["speedup"], brow["speedup"]
+        field = _VALUE_FIELD.get(suite, "speedup")
+        unit = "" if field == "speedup" else " " + field.split("_")[-1]
+        got, ref = crow[field], brow[field]
         tol = max(tolerance, _SUITE_TOLERANCE.get(suite, 0.0))
         floor = max(_FLOORS[suite], (1.0 - tol) * ref)
         status = "ok" if got >= floor else "FAIL"
-        print(f"{tag}: {got:.2f}x (baseline {ref:.2f}x, "
-              f"floor {floor:.2f}x) {status}")
+        sym = "x" if field == "speedup" else unit
+        print(f"{tag}: {got:.2f}{sym} (baseline {ref:.2f}{sym}, "
+              f"floor {floor:.2f}{sym}) {status}")
         if got < floor:
             failures.append(
-                f"{tag}: {got:.2f}x is below floor {floor:.2f}x "
-                f"(baseline {ref:.2f}x, tolerance {tol:.0%})")
+                f"{tag}: {field} {got:.2f} is below floor {floor:.2f} "
+                f"(baseline {ref:.2f}, tolerance {tol:.0%})")
         if suite in _PARITY_SUITES and not crow.get("parity", False):
-            failures.append(f"{tag}: jax backend parity bit not set")
+            failures.append(f"{tag}: parity bit not set")
+        for bit in _REQUIRED_BITS.get(suite, ()):
+            if not crow.get(bit, False):
+                failures.append(f"{tag}: required bit {bit!r} not set")
     if not base:
         failures.append(f"no acceptance rows found in {baseline}")
     return failures

@@ -121,4 +121,28 @@ np_ = SimEngine(hier, SimParams(seed=0, latency_model="edge")).run(
 assert np.array_equal(jx.metrics.response_time_s,
                       np_.metrics.response_time_s)
 print("[topologies] edge-latency model bit-exact numpy == jax ✓")
+
+# ---- 6. serving: run_many batching + an always-on QueryServer ------------
+# (docs/SERVING.md covers the server lifecycle and batching rules)
+from repro.engine import QueryServer, ServerConfig
+
+specs = [QuerySpec(origins=(o,), seed=i)
+         for i, o in enumerate((0, 7, 42, 99, 3, 12, 5, 31))]
+pols = ["fd-dynamic", "cn"] * 4
+fused = engine.run_many(specs, pols)       # one sweep per policy group
+solo = [engine.run(s, p) for s, p in zip(specs, pols)]
+assert all(np.array_equal(f.metrics.b_fw, s.metrics.b_fw)
+           for f, s in zip(fused, solo))   # batching changes no bits
+print(f"\n[serve] run_many fused 8 requests into sweeps of "
+      f"{sorted({r.batch_size for r in fused})} — bit-exact vs run() ✓")
+
+with QueryServer(engine, ServerConfig(max_batch=8)) as server:
+    handles = [server.submit(s, p) for s, p in zip(specs, pols)]
+    results = [h.result(timeout=30) for h in handles]
+    m = server.metrics()
+assert all(np.array_equal(r.metrics.b_fw, s.metrics.b_fw)
+           for r, s in zip(results, solo))
+print(f"[serve] QueryServer served {m['served']}/8, mean batch "
+      f"{m['mean_batch']:.1f}, p50 latency "
+      f"{m['latency']['p50_s'] * 1e3:.1f} ms")
 print("engine quickstart OK")

@@ -5,9 +5,9 @@ __version__ = "0.1.0"
 # Resolved lazily so ``import repro`` stays dependency-free (DeviceEngine
 # pulls in JAX, SimEngine pulls in the numpy simulator).
 _ENGINE_EXPORTS = ("QuerySpec", "Policy", "TopKResult", "NetworkPlan",
-                   "SimEngine", "DeviceEngine", "get_policy",
-                   "register_policy", "available_policies",
-                   "policy_from_legacy")
+                   "Engine", "SimEngine", "DeviceEngine", "QueryServer",
+                   "ServerConfig", "get_policy", "register_policy",
+                   "available_policies", "policy_from_legacy")
 
 __all__ = list(_ENGINE_EXPORTS)
 

@@ -17,16 +17,29 @@ jitted JAX over the plan's cached ``DepthSlices`` (``sim_jax`` is
 imported lazily, so the default numpy path stays JAX-free);
 ``DeviceEngine`` exposes the same surface over the JAX shard_map
 collectives (also imported lazily).
+
+For sustained concurrent load, ``QueryServer`` hosts warm engines
+behind a bounded queue and a dynamic batcher that coalesces compatible
+requests onto one sweep via ``Engine.run_many`` (see docs/SERVING.md):
+
+    with QueryServer(SimEngine(topology, backend="jax")) as server:
+        handle = server.submit(QuerySpec(origins=(0,)), "fd-dynamic")
+        res = handle.result()
 """
-from repro.engine.api import (Policy, QuerySpec, TopKResult,  # noqa: F401
-                              available_policies, get_policy,
+from repro.engine.api import (Engine, Policy, QuerySpec,  # noqa: F401
+                              TopKResult, available_policies, get_policy,
                               policy_from_legacy, register_policy)
 from repro.engine.plan import NetworkPlan  # noqa: F401
+from repro.engine.serve import (QueryHandle, QueryServer,  # noqa: F401
+                                RequestTimeout, ServerClosed, ServerConfig,
+                                ServerError, ServerOverloaded)
 from repro.engine.sim import SimEngine  # noqa: F401
 
-__all__ = ["QuerySpec", "Policy", "TopKResult", "NetworkPlan", "SimEngine",
-           "DeviceEngine", "available_policies", "get_policy",
-           "policy_from_legacy", "register_policy"]
+__all__ = ["QuerySpec", "Policy", "TopKResult", "NetworkPlan", "Engine",
+           "SimEngine", "DeviceEngine", "QueryServer", "QueryHandle",
+           "ServerConfig", "ServerError", "ServerOverloaded",
+           "RequestTimeout", "ServerClosed", "available_policies",
+           "get_policy", "policy_from_legacy", "register_policy"]
 
 
 def __getattr__(name):

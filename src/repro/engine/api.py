@@ -15,9 +15,10 @@ Every backend returns the same ``TopKResult``.
 """
 from __future__ import annotations
 
+import abc
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.p2psim.metrics import BatchMetrics, QueryMetrics
 
@@ -184,6 +185,27 @@ class TopKResult:
     measured on (the topology family's registered ``kind`` and the
     effective link-latency regime) — the sim backends fill them, the
     device backend has no overlay and leaves them ``None``.
+
+    Serving metadata (every backend fills these; the serving layer in
+    ``repro.engine.serve`` aggregates them into its per-request
+    timings):
+
+    * ``queue_s`` — seconds the request waited before execution began.
+      Backends set 0.0 (a direct ``run`` never queues); the
+      ``QueryServer`` dispatcher overwrites it with the measured
+      enqueue-to-dispatch wait.
+    * ``compile_s`` — seconds of plan / trace preparation attributable
+      to this call: origin-statics compilation on the sim backends
+      (0.0 on a warm ``NetworkPlan``), jitted-callable construction on
+      the device backend.
+    * ``run_s`` — wall seconds of the executed sweep itself (on the
+      jax backends this includes XLA tracing on the first call for a
+      given tree profile; warm calls are pure execution).
+    * ``batch_size`` — how many requests shared the executed sweep: 1
+      for a direct ``run``, the coalesced group size when
+      ``Engine.run_many`` (or the server's dynamic batcher) fused this
+      request with others.  Fused requests report the SAME
+      ``compile_s`` / ``run_s`` (the one sweep they shared).
     """
 
     policy: str
@@ -196,6 +218,10 @@ class TopKResult:
     values: Any = None
     indices: Any = None
     rows: Any = None
+    queue_s: float = 0.0               # wait before execution (server)
+    compile_s: float = 0.0             # plan/trace prep for this call
+    run_s: float = 0.0                 # executed-sweep wall seconds
+    batch_size: int = 1                # requests sharing the sweep
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -223,3 +249,61 @@ class TopKResult:
         out.update({key: v for key, v in self.extras.items()
                     if isinstance(v, (int, float, str, bool))})
         return out
+
+
+PolicyLike = Union[str, Policy]
+
+
+class Engine(abc.ABC):
+    """The backend contract every engine implements.
+
+    An engine is a LONG-LIVED object: it owns compiled per-overlay /
+    per-mesh state (``NetworkPlan``, jit traces, compiled collectives)
+    and amortizes it across calls.  Two entrypoints:
+
+    * ``run(spec, policy)`` — one ``QuerySpec``, one ``TopKResult``;
+    * ``run_many(specs, policies)`` — a request batch.  Backends group
+      COMPATIBLE specs (same policy and effective execution signature)
+      onto one batched sweep and split the results back out, so ``N``
+      concurrent requests cost one sweep instead of ``N`` — this is
+      the call the serving layer's dynamic batcher makes.  Results are
+      positionally matched to ``specs`` and each is entry-wise
+      bit-exact with what a sequential ``run`` would have returned.
+
+    The base-class ``run_many`` is the trivially correct sequential
+    fallback; ``SimEngine`` / ``DeviceEngine`` override it with real
+    coalescing.
+    """
+
+    #: engine identity recorded on every TopKResult ("sim" | "sim-jax"
+    #: | "device"); subclasses overwrite it per instance
+    backend = "abstract"
+
+    @abc.abstractmethod
+    def run(self, spec: Optional[QuerySpec] = None,
+            policy: PolicyLike = "fd-dynamic", **kwargs) -> TopKResult:
+        """Execute one ``QuerySpec`` under ``policy``."""
+
+    def run_many(self, specs: Sequence[QuerySpec],
+                 policies: Union[PolicyLike, Sequence[PolicyLike]]
+                 = "fd-dynamic", **kwargs) -> List[TopKResult]:
+        """Execute a batch of specs; result ``i`` answers ``specs[i]``.
+
+        ``policies`` is one policy applied to every spec or a sequence
+        zipped with ``specs``.  This default implementation runs the
+        specs sequentially — correct for any backend, no coalescing.
+        """
+        pols = self._zip_policies(specs, policies)
+        return [self.run(s, p, **kwargs) for s, p in zip(specs, pols)]
+
+    @staticmethod
+    def _zip_policies(specs: Sequence[QuerySpec],
+                      policies) -> List[Policy]:
+        """Resolve ``policies`` into one ``Policy`` per spec."""
+        if isinstance(policies, (str, Policy)):
+            return [get_policy(policies)] * len(specs)
+        pols = [get_policy(p) for p in policies]
+        if len(pols) != len(specs):
+            raise ValueError(f"got {len(specs)} specs but {len(pols)} "
+                             "policies")
+        return pols

@@ -16,14 +16,16 @@ no device backend.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Union
+import time
+from typing import List, Optional, Sequence, Union
 
-from repro.engine.api import Policy, QuerySpec, TopKResult, get_policy
+from repro.engine.api import (Engine, Policy, QuerySpec, TopKResult,
+                              get_policy)
 
 _DEVICE_ALGOS = ("fd", "cn", "cn_star")
 
 
-class DeviceEngine:
+class DeviceEngine(Engine):
     """Unified Top-k engine backend over a JAX device mesh."""
 
     backend = "device"
@@ -79,34 +81,111 @@ class DeviceEngine:
 
         ``rows`` — optional (N, d) sharded table: runs the phase-4
         data-retrieval gather and fills ``TopKResult.rows`` (FD only).
-        Only ``spec.k`` is read from the spec on this backend.
+        Only ``spec.k`` is read from the spec on this backend.  This is
+        the batch-of-1 case of :meth:`run_many`.
+        """
+        spec = spec if spec is not None else QuerySpec()
+        return self.run_many([spec], [policy], scores=[scores],
+                             rows=None if rows is None else [rows])[0]
+
+    def run_many(self, specs: Sequence[QuerySpec],
+                 policies: Union[str, Policy,
+                                 Sequence[Union[str, Policy]]]
+                 = "fd-dynamic", *, scores: Sequence,
+                 rows: Optional[Sequence] = None) -> List[TopKResult]:
+        """Execute a request batch; ``scores[i]`` answers ``specs[i]``.
+
+        Requests with 1-D score vectors of identical shape/dtype, the
+        same effective ``k`` and the same lowered collective (all
+        ``fd-*`` policies share the FD program) are STACKED onto one
+        batched collective call — one jitted program executes the whole
+        group, each row recovering exactly the bits its solo call would
+        produce (the collectives are elementwise per batch row).
+        Gather-path requests (``rows``) and pre-batched score arrays run
+        individually.  ``rows`` is an optional per-spec sequence
+        (``None`` entries take the plain top-k path).
         """
         if self.mesh is None:
             raise RuntimeError("call DeviceEngine.prepare(mesh) first")
-        spec = spec if spec is not None else QuerySpec()
-        pol = get_policy(policy)
-        if pol.algorithm not in _DEVICE_ALGOS:
+        pols = self._zip_policies(specs, policies)
+        row_seq = list(rows) if rows is not None else [None] * len(specs)
+        if len(scores) != len(specs) or len(row_seq) != len(specs):
             raise ValueError(
-                f"policy {pol.name!r} (algorithm {pol.algorithm!r}) has no "
-                f"device backend; use one of {_DEVICE_ALGOS}")
-        k = spec.k if spec.k is not None else 20
-        n = scores.shape[-1]
-        extras = {}
-        if n % self.axis_size == 0:
-            from repro.core.fd import comm_bytes
-            extras["model_bytes"] = comm_bytes(
-                pol.algorithm, self.axis_size, n // self.axis_size, k,
-                schedule=self.schedule)
+                f"need one scores (and rows) entry per spec: "
+                f"{len(specs)} specs, {len(scores)} scores, "
+                f"{len(row_seq)} rows")
+        results: List[Optional[TopKResult]] = [None] * len(specs)
+        groups: dict = {}               # exec signature -> [index]
+        for i, (spec, pol) in enumerate(zip(specs, pols)):
+            if pol.algorithm not in _DEVICE_ALGOS:
+                raise ValueError(
+                    f"policy {pol.name!r} (algorithm {pol.algorithm!r}) "
+                    f"has no device backend; use one of {_DEVICE_ALGOS}")
+            k = spec.k if spec.k is not None else 20
+            s = scores[i]
+            if row_seq[i] is not None or getattr(s, "ndim", 0) != 1:
+                results[i] = self._run_one(pol, k, s, row_seq[i])
+                continue
+            key = (pol.algorithm, k, s.shape, str(getattr(s, "dtype", "")))
+            groups.setdefault(key, []).append(i)
+        for (algorithm, k, _, _), idxs in groups.items():
+            if len(idxs) == 1:
+                i = idxs[0]
+                results[i] = self._run_one(pols[i], k, scores[i], None)
+                continue
+            import jax
+            import jax.numpy as jnp
+            stacked = jnp.stack([scores[i] for i in idxs])
+            t0 = time.perf_counter()
+            fn = self._fn("topk", k, algorithm)
+            compile_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            vals, idx = fn(stacked)
+            jax.block_until_ready(vals)
+            run_s = time.perf_counter() - t0
+            for b, i in enumerate(idxs):
+                res = self._result(pols[i], k, scores[i], vals[b], idx[b],
+                                   None)
+                res.compile_s, res.run_s = compile_s, run_s
+                res.batch_size = len(idxs)
+                results[i] = res
+        return results
+
+    def _run_one(self, pol: Policy, k: int, scores, rows) -> TopKResult:
+        """One unfused collective call (gather / pre-batched / solo)."""
+        import jax
+        t0 = time.perf_counter()
         if rows is not None:
             if pol.algorithm != "fd":
                 raise ValueError(
                     "the data-retrieval gather path is FD-only "
                     "(CN ships whole shards, not k rows)")
-            vals, idx, got = self._fn("gather", k, pol.algorithm)(scores,
-                                                                  rows)
-            return TopKResult(policy=pol.name, backend=self.backend, k=k,
-                              values=vals, indices=idx, rows=got,
-                              extras=extras)
-        vals, idx = self._fn("topk", k, pol.algorithm)(scores)
+            fn = self._fn("gather", k, pol.algorithm)
+            compile_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            vals, idx, got = fn(scores, rows)
+            jax.block_until_ready(vals)
+            res = self._result(pol, k, scores, vals, idx, got)
+        else:
+            fn = self._fn("topk", k, pol.algorithm)
+            compile_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            vals, idx = fn(scores)
+            jax.block_until_ready(vals)
+            res = self._result(pol, k, scores, vals, idx, None)
+        res.compile_s, res.run_s = compile_s, time.perf_counter() - t0
+        return res
+
+    def _result(self, pol: Policy, k: int, scores, vals, idx,
+                got) -> TopKResult:
+        """Assemble a TopKResult (+ the comm-model bytes extra)."""
+        extras = {}
+        n = scores.shape[-1]
+        if n % self.axis_size == 0:
+            from repro.core.fd import comm_bytes
+            extras["model_bytes"] = comm_bytes(
+                pol.algorithm, self.axis_size, n // self.axis_size, k,
+                schedule=self.schedule)
         return TopKResult(policy=pol.name, backend=self.backend, k=k,
-                          values=vals, indices=idx, extras=extras)
+                          values=vals, indices=idx, rows=got,
+                          extras=extras)

@@ -17,12 +17,14 @@ by tests/test_engine.py + tests/test_multi_query.py):
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
-from typing import Optional, Union
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.engine.api import Policy, QuerySpec, TopKResult, get_policy
+from repro.engine.api import (Engine, Policy, QuerySpec, TopKResult,
+                              get_policy)
 from repro.engine.plan import NetworkPlan
 from repro.p2psim.graph import Topology
 from repro.p2psim.metrics import QUERY_BYTES, BatchMetrics, QueryMetrics
@@ -30,18 +32,30 @@ from repro.p2psim.simulate import (SimParams, _latency_mode,
                                    _run_entries, run_query_reference)
 
 _BM_FIELDS = ("m_bw", "m_rt", "b_bw", "b_rt", "response_time_s", "accuracy")
+_ALL_BM_FIELDS = ("n_reached", "n_edges_pq", "avg_degree", "m_fw",
+                  "b_fw") + _BM_FIELDS
 
 
 def _batch_of_one(met: QueryMetrics) -> BatchMetrics:
     """Wrap one scalar QueryMetrics as a (1, 1) BatchMetrics."""
     bm = BatchMetrics.empty(met.algorithm, 1, 1)
-    for f in ("n_reached", "n_edges_pq", "avg_degree", "m_fw", "b_fw") \
-            + _BM_FIELDS:
+    for f in _ALL_BM_FIELDS:
         getattr(bm, f)[0, 0] = getattr(met, f)
     return bm
 
 
-class SimEngine:
+def _slice_rows(bm: BatchMetrics, lo: int, n_queries: int,
+                n_trials: int) -> BatchMetrics:
+    """Reshape rows [lo, lo + Q*T) of a flat (N, 1) batch to (Q, T)."""
+    out = BatchMetrics.empty(bm.algorithm, n_queries, n_trials)
+    hi = lo + n_queries * n_trials
+    for f in _ALL_BM_FIELDS:
+        getattr(out, f)[:] = getattr(bm, f)[lo:hi, 0].reshape(
+            n_queries, n_trials)
+    return out
+
+
+class SimEngine(Engine):
     """Unified Top-k engine backend over the overlay simulator.
 
     ``backend`` selects the sweep implementation:
@@ -102,11 +116,19 @@ class SimEngine:
     def run(self, spec: Optional[QuerySpec] = None,
             policy: Union[str, Policy] = "fd-dynamic", *,
             params: Optional[SimParams] = None) -> TopKResult:
-        """Execute ``spec`` under ``policy`` on the prepared overlay."""
-        if self.plan is None:
-            raise RuntimeError("call SimEngine.prepare(topology) first")
+        """Execute ``spec`` under ``policy`` on the prepared overlay.
+
+        This is the batch-of-1 case of :meth:`run_many`.
+        """
         spec = spec if spec is not None else QuerySpec()
-        pol = get_policy(policy)
+        return self.run_many([spec], [policy], params=params)[0]
+
+    # ---- dynamic batching (run_many) -------------------------------------
+
+    def _effective(self, spec: QuerySpec,
+                   params: Optional[SimParams]) -> SimParams:
+        """The ``SimParams`` this spec executes under (spec overrides
+        applied)."""
         p = params if params is not None else self.params
         if spec.k is not None:
             p = dataclasses.replace(p, k=spec.k)
@@ -114,27 +136,115 @@ class SimEngine:
             p = dataclasses.replace(p, seed=spec.seed)
         if spec.latency_model is not None:
             p = dataclasses.replace(p, latency_model=spec.latency_model)
+        return p
+
+    @staticmethod
+    def _coalescable(spec: QuerySpec, pol: Policy) -> bool:
+        """True when the spec's entries can be fused with other specs'
+        onto one sweep without changing a single drawn bit.
+
+        Independent-stream entries (``rng="independent"`` or explicit
+        ``seeds``) draw from their own generators, so their results
+        depend only on (origin, entry seed, params, policy) — fusing is
+        free.  A SHARED-stream spec draws batch-shaped arrays from one
+        generator, so its draws depend on the whole batch shape — except
+        for a batch of ONE, which is bit-for-bit the scalar reference on
+        its seed, i.e. exactly the independent entry with that seed.
+        Multi-entry shared specs therefore execute alone; the two-round
+        ``fd-stats`` heuristic always does.
+        """
+        if pol.algorithm == "fd-stats":
+            return False
+        return spec.independent or (len(spec.origins) * spec.n_trials == 1)
+
+    def _entry_seeds(self, spec: QuerySpec, p: SimParams) -> np.ndarray:
+        """Per-entry RNG seeds, flattened — explicit ``seeds`` verbatim,
+        else the engine's ``seed + q * n_trials + t`` derivation."""
+        Q, T = len(spec.origins), spec.n_trials
+        if spec.seeds is not None:
+            seeds = np.asarray(spec.seeds, dtype=np.int64)
+            if seeds.shape != (Q, T):
+                raise ValueError(
+                    f"seeds must be ({Q}, {T}), got {seeds.shape}")
+            return seeds.reshape(-1)
+        return p.seed + np.arange(Q * T, dtype=np.int64)
+
+    def run_many(self, specs: Sequence[QuerySpec],
+                 policies: Union[str, Policy,
+                                 Sequence[Union[str, Policy]]]
+                 = "fd-dynamic", *,
+                 params: Optional[SimParams] = None) -> List[TopKResult]:
+        """Execute a request batch, coalescing compatible specs.
+
+        Specs sharing an execution signature — same resolved ``Policy``
+        and same effective ``(k, latency_model)`` — whose entries are
+        independently seeded (see :meth:`_coalescable`) are fused onto
+        ONE batched sweep: their (origin, seed) entries concatenate into
+        a single flattened spec with explicit per-entry seeds, reusing
+        the plan's cached statics / ``DepthSlices`` and (on the jax
+        backend) one jit trace for the whole group.  Every returned
+        result is entry-wise bit-exact with a sequential ``run`` of its
+        spec; ``TopKResult.batch_size`` records how many requests shared
+        the executed sweep.
+        """
+        pols = self._zip_policies(specs, policies)
+        results: List[Optional[TopKResult]] = [None] * len(specs)
+        groups: dict = {}               # signature -> [request index]
+        for i, (spec, pol) in enumerate(zip(specs, pols)):
+            p = self._effective(spec, params)
+            if not self._coalescable(spec, pol):
+                results[i] = self._execute(spec, pol, p)
+                continue
+            groups.setdefault((pol, p.k, p.latency_model), []).append(i)
+        for (pol, k, lm), idxs in groups.items():
+            if len(idxs) == 1:          # nothing to fuse: direct path
+                i = idxs[0]
+                results[i] = self._execute(
+                    specs[i], pol, self._effective(specs[i], params))
+                continue
+            origins, seeds, shapes = [], [], []
+            for i in idxs:
+                spec = specs[i]
+                p = self._effective(spec, params)
+                origins.append(np.repeat(
+                    np.asarray(spec.origins, np.int64), spec.n_trials))
+                seeds.append(self._entry_seeds(spec, p))
+                shapes.append((len(spec.origins), spec.n_trials))
+            fused = QuerySpec(
+                origins=tuple(int(o) for o in np.concatenate(origins)),
+                n_trials=1, k=k, latency_model=lm,
+                seeds=np.concatenate(seeds)[:, None])
+            res = self._execute(fused, pol,
+                                self._effective(fused, params))
+            lo = 0
+            for i, (Q, T) in zip(idxs, shapes):
+                results[i] = dataclasses.replace(
+                    res, metrics=_slice_rows(res.metrics, lo, Q, T),
+                    batch_size=len(idxs), extras=dict(res.extras))
+                lo += Q * T
+        return results
+
+    def _execute(self, spec: QuerySpec, pol: Policy,
+                 p: SimParams) -> TopKResult:
+        """Run one (already resolved) spec on the prepared overlay."""
+        if self.plan is None:
+            raise RuntimeError("call SimEngine.prepare(topology) first")
         _latency_mode(self.plan.top, p)   # validate model name + coords
         if pol.algorithm == "fd-stats":
             return self._run_stats(spec, pol, p)
 
         origins = np.atleast_1d(np.asarray(spec.origins, dtype=np.int64))
         Q, T = len(origins), spec.n_trials
-        seeds = spec.seeds
-        if seeds is not None:
-            seeds = np.asarray(seeds, dtype=np.int64)
-            if seeds.shape != (Q, T):
-                raise ValueError(
-                    f"seeds must be ({Q}, {T}), got {seeds.shape}")
-            ent_seeds = seeds.reshape(-1)
-        else:
-            ent_seeds = p.seed + np.arange(Q * T, dtype=np.int64)
+        ent_seeds = self._entry_seeds(spec, p)
 
         fw_strategy = ("basic" if pol.algorithm in ("cn", "cn_star")
                        else pol.strategy)
+        t0 = time.perf_counter()
         sts, st_of_q = self.plan.origin_statics(origins, p.ttl, fw_strategy)
+        compile_s = time.perf_counter() - t0
         ent_st = np.repeat(st_of_q, T)
         ent_origin = np.repeat(origins, T)
+        t0 = time.perf_counter()
         if self._backend == "jax":
             from repro.engine.sim_jax import run_entries_jax
             res = run_entries_jax(self.plan, sts, ent_st, ent_origin,
@@ -149,6 +259,7 @@ class SimEngine:
                                pol.dynamic, pol.lifetime_mean_s,
                                spec.independent)
             used = "sim"
+        run_s = time.perf_counter() - t0
 
         bm = BatchMetrics.empty(pol.algorithm, Q, T)
         n_reached_s = np.array([len(st.idx) for st in sts], np.int64)
@@ -163,7 +274,8 @@ class SimEngine:
             getattr(bm, f)[:] = res[f].reshape(Q, T)
         return TopKResult(policy=pol.name, backend=self.backend, k=p.k,
                           backend_used=used, topology=self.plan.top.kind,
-                          latency_model=p.latency_model, metrics=bm)
+                          latency_model=p.latency_model, metrics=bm,
+                          compile_s=compile_s, run_s=run_s)
 
     # ---- statistics heuristic (paper §3.3 + Fig 7) ----------------------
 
@@ -174,6 +286,7 @@ class SimEngine:
         ranked above ``z * k`` in the parent's merged list."""
         used = self._fallback("the two-round fd-stats heuristic has no "
                               "jitted lowering")
+        t_start = time.perf_counter()
         origins = np.atleast_1d(np.asarray(spec.origins, dtype=np.int64))
         if len(origins) != 1 or spec.n_trials != 1:
             raise ValueError("fd-stats runs one origin x one trial per call")
@@ -221,6 +334,7 @@ class SimEngine:
             policy=pol.name, backend=self.backend, k=k,
             backend_used=used, topology=top.kind,
             latency_model=p.latency_model, metrics=_batch_of_one(met2),
+            run_s=time.perf_counter() - t_start,
             extras={"metrics_full": met1, "metrics_pruned": met2,
                     "comm_reduction": reduction, "accuracy": acc,
                     "z": pol.z})

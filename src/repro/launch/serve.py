@@ -1,40 +1,48 @@
-"""Batched serving driver — prefill + decode with FD top-k sampling.
+"""Serving entrypoints: always-on overlay query serving + LM decode.
 
-This is the paper-shaped end-to-end path: every decode step executes a
-Top-k "query" over the vocab axis (sharded across the ``model`` mesh
-axis) using the FD merge-and-backward.  ``--policy`` selects a member
-of the ``repro.engine`` registry (``fd-dynamic`` / ``cn`` /
-``cn-star``); the legacy ``--algorithm cn|cn_star`` flag still works
-and is mapped onto a policy (benchmarks/tpu_comm uses this).
+Two subcommands share this launcher:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+``overlay`` — the paper-shaped service: a long-lived
+:class:`repro.engine.QueryServer` hosting warm ``SimEngine`` instances
+(one per requested topology), dynamically batching concurrent
+``QuerySpec`` streams onto shared jitted sweeps and reporting serving
+metrics (throughput, latency percentiles, batch histogram).
+
+  PYTHONPATH=src python -m repro.launch.serve overlay \
+      --topology ba --n-peers 2000 --backend jax \
+      --policies fd-dynamic,cn --requests 256 --concurrency 16
+
+``decode`` — the LM end-to-end path: prefill + decode where every decode
+step executes a Top-k "query" over the model-sharded vocab axis using
+the FD merge-and-backward.  ``--policy`` selects a member of the
+``repro.engine`` registry (``fd-dynamic`` / ``cn`` / ``cn-star``); the
+legacy ``--algorithm cn|cn_star`` flag still works and is mapped onto a
+policy (benchmarks/tpu_comm uses this).
+
+  PYTHONPATH=src python -m repro.launch.serve decode --arch qwen2-0.5b \
+      --smoke --batch 4 --prompt-len 32 --gen 16
+
+Flag-style invocations without a subcommand (``... serve --arch ...``)
+keep routing to ``decode`` for back compatibility.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding
 
-from repro import jaxcompat
-from repro.configs.base import get_config, smoke_config
-from repro.data.pipeline import extra_model_inputs
-from repro.launch.mesh import make_host_mesh
-from repro.models import model as M
-from repro.models import attention as A
-from repro.optim.sharding import batch_axes, param_specs
-from repro.runtime.steps import make_serve_step
-
-import numpy as np
-
-
-def state_from_prefill(cfg, prefill_state: M.DecodeState, s_max: int,
-                       cache_dtype=jnp.float32) -> M.DecodeState:
+def state_from_prefill(cfg, prefill_state, s_max: int,
+                       cache_dtype=None):
     """Convert prompt-length caches into pre-sized decode caches (pad the
     seq dim to s_max; window caches wrap the last W positions)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import attention as A
+    from repro.models import model as M
+
+    if cache_dtype is None:
+        cache_dtype = jnp.float32
     pos = int(prefill_state.pos)
 
     def _pad_seq(a, axis: int, target: int):
@@ -107,8 +115,107 @@ def state_from_prefill(cfg, prefill_state: M.DecodeState, s_max: int,
     return M.DecodeState(caches, prefill_state.pos)
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def main_overlay(argv=None):
+    """Run a QueryServer over warm overlay engines and drive it with a
+    closed-loop client pool; prints and returns the serving metrics."""
+    import threading
+
+    import numpy as np
+
+    ap = argparse.ArgumentParser(prog="serve overlay")
+    ap.add_argument("--topology", default="ba",
+                    help="comma list of registered topology families "
+                         "(one warm engine per entry)")
+    ap.add_argument("--n-peers", type=int, default=1000)
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax"))
+    ap.add_argument("--policies", default="fd-dynamic,cn",
+                    help="comma list of engine policy names, assigned "
+                         "round-robin to requests")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--concurrency", type=int, default=16,
+                    help="closed-loop client threads")
+    ap.add_argument("--n-trials", type=int, default=1)
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    ap.add_argument("--timeout-s", type=float, default=None)
+    args = ap.parse_args(argv)
+
+    from repro.engine import QueryServer, QuerySpec, ServerConfig, SimEngine
+    from repro.engine.serve import ServerError
+    from repro.p2psim import SimParams, build_topology
+
+    params = SimParams(k=args.k)
+    engines = {}
+    for fam in args.topology.split(","):
+        fam = fam.strip()
+        topo = build_topology(fam, args.n_peers, seed=args.seed)
+        engines[fam] = SimEngine(topo, params=params,
+                                 backend=args.backend)
+    policies = [p.strip() for p in args.policies.split(",")]
+    names = sorted(engines)
+    server = QueryServer(engines, ServerConfig(
+        max_queue=args.max_queue, max_batch=args.max_batch,
+        batch_window_s=args.batch_window_ms / 1e3,
+        default_timeout_s=args.timeout_s))
+    for name in names:      # populate plan / jit caches before load
+        server.warm(QuerySpec(origins=(0,), seed=args.seed),
+                    policies[0], engine=name)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [(QuerySpec(origins=(int(rng.integers(args.n_peers)),),
+                       n_trials=args.n_trials,
+                       seed=int(rng.integers(1 << 30))),
+             policies[i % len(policies)], names[i % len(names)])
+            for i in range(args.requests)]
+    cursor = {"i": 0}
+    lock = threading.Lock()
+    errors = []
+
+    def client():
+        while True:
+            with lock:
+                i = cursor["i"]
+                if i >= len(reqs):
+                    return
+                cursor["i"] = i + 1
+            spec, pol, name = reqs[i]
+            try:
+                server.query(spec, pol, engine=name)
+            except ServerError as e:     # shed/timeout: counted, not fatal
+                errors.append(e)
+
+    with server:
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client)
+                   for _ in range(args.concurrency)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        metrics = server.metrics()
+    metrics["wall_s"] = wall
+    metrics["throughput_qps"] = metrics["served"] / max(wall, 1e-9)
+    lat = metrics.get("latency", {})
+    print(f"served {metrics['served']}/{args.requests} requests over "
+          f"{len(engines)} engine(s) [{args.backend}] in {wall:.2f}s "
+          f"({metrics['throughput_qps']:.1f} qps); shed "
+          f"{metrics['shed']}, timed out {metrics['timed_out']}")
+    if lat:
+        print("latency p50/p95/p99 = "
+              f"{lat['p50_s'] * 1e3:.2f}/{lat['p95_s'] * 1e3:.2f}/"
+              f"{lat['p99_s'] * 1e3:.2f} ms; mean batch "
+              f"{metrics['mean_batch']:.2f} (max {metrics['max_batch']})")
+    return metrics
+
+
+def main_decode(argv=None):
+    """LM prefill + decode driver (FD top-k sampling each step)."""
+    ap = argparse.ArgumentParser(prog="serve decode")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -124,9 +231,22 @@ def main():
                     help="legacy algorithm flag (mapped onto a policy)")
     ap.add_argument("--schedule", default="halving",
                     choices=("halving", "doubling", "ring"))
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding
+
+    from repro import jaxcompat
+    from repro.configs.base import get_config, smoke_config
+    from repro.data.pipeline import extra_model_inputs
     from repro.engine import get_policy, policy_from_legacy
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.optim.sharding import batch_axes, param_specs
+    from repro.runtime.steps import make_serve_step
+
     try:
         pol = (get_policy(args.policy) if args.policy
                else policy_from_legacy(args.algorithm))
@@ -186,6 +306,17 @@ def main():
     print("sample tokens:", toks[0, :12].tolist())
     ctx.__exit__(None, None, None)
     return toks
+
+
+def main(argv=None):
+    """Dispatch ``overlay`` / ``decode``; bare flags route to decode."""
+    import sys
+    argv = list(sys.argv[1:]) if argv is None else list(argv)
+    if argv and argv[0] == "overlay":
+        return main_overlay(argv[1:])
+    if argv and argv[0] == "decode":
+        return main_decode(argv[1:])
+    return main_decode(argv)            # legacy flag-style invocation
 
 
 if __name__ == "__main__":

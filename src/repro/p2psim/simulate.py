@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -493,7 +494,16 @@ def run_query(top: Topology, origin: int = 0,
     ``run_query_reference`` — see tests/test_engine.py.  The
     ``child_mask`` / ``return_state`` variants carry per-node state the
     batch engine does not expose and run the reference directly.
+
+    .. deprecated:: use ``repro.engine.SimEngine`` with a ``QuerySpec``
+       (``SimEngine(top, params).run(QuerySpec(origins=(origin,)),
+       policy)``) — see the README migration table.
     """
+    warnings.warn(
+        "run_query is deprecated; use repro.engine.SimEngine with a "
+        "QuerySpec: SimEngine(top, params).run(QuerySpec(origins="
+        "(origin,)), policy) — see the README migration table",
+        DeprecationWarning, stacklevel=2)
     if child_mask is not None or return_state:
         return run_query_reference(
             top, origin, params, algorithm=algorithm, strategy=strategy,
@@ -1266,7 +1276,15 @@ def run_queries(top: Topology, origins,
         entry (q, t) reproduces ``run_query`` with seed
         ``params.seed + q * n_trials + t`` (or ``seeds[q, t]``)
         bit-for-bit, entry by entry.
+
+    .. deprecated:: use ``repro.engine.SimEngine`` with a ``QuerySpec``
+       (``QuerySpec(origins=origins, n_trials=n_trials,
+       rng="independent")``) — see the README migration table.
     """
+    warnings.warn(
+        "run_queries is deprecated; use repro.engine.SimEngine with a "
+        "QuerySpec(origins=..., n_trials=..., rng=...) — see the README "
+        "migration table", DeprecationWarning, stacklevel=2)
     from repro.engine import QuerySpec, SimEngine, policy_from_legacy
     pol = policy_from_legacy(algorithm, strategy, dynamic, lifetime_mean_s)
     spec = QuerySpec(
@@ -1287,7 +1305,18 @@ def run_statistics_heuristic(top: Topology, origin: int,
     FD gathers per-child best-rank stats; round 2 forwards Q only to
     children whose best past score ranked above z*k in the parent's
     merged list.  Returns (metrics_full, metrics_pruned,
-    comm_reduction, accuracy)."""
+    comm_reduction, accuracy).
+
+    .. deprecated:: use ``repro.engine.SimEngine`` with the
+       ``"fd-stats"`` policy (``get_policy("fd-stats").variant(z=z)``;
+       rounds land in ``TopKResult.extras``) — see the README migration
+       table.
+    """
+    warnings.warn(
+        "run_statistics_heuristic is deprecated; use repro.engine."
+        "SimEngine with get_policy('fd-stats').variant(z=z) — rounds "
+        "land in TopKResult.extras; see the README migration table",
+        DeprecationWarning, stacklevel=2)
     from repro.engine import QuerySpec, SimEngine, get_policy
     res = SimEngine(top, params).run(
         QuerySpec(origins=(int(origin),)),

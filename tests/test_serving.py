@@ -1,0 +1,319 @@
+"""Always-on serving layer (ISSUE 6): Engine.run_many dynamic batching
++ the QueryServer.
+
+  * ``run_many`` over mixed policies is entry-wise BIT-EXACT with
+    sequential ``run()`` calls in every RNG mode (shared batch-of-1,
+    independent streams, explicit seed grids, shared multi-entry) on
+    the numpy AND jax backends — and coalescing really happens
+    (``batch_size > 1``);
+  * the server sheds deterministically at the queue bound, times out
+    deterministically at dispatch, drains on stop, and serves bits
+    identical to direct ``run()``;
+  * the legacy shims emit ``DeprecationWarning``s naming the
+    QuerySpec+engine replacement;
+  * the ``overlay`` launch subcommand serves a mixed stream end to end.
+"""
+import numpy as np
+import pytest
+
+from repro.engine import (Engine, QueryServer, QuerySpec, RequestTimeout,
+                          ServerClosed, ServerConfig, ServerOverloaded,
+                          SimEngine, TopKResult, get_policy)
+from repro.p2psim import SimParams, barabasi_albert
+
+TOP = barabasi_albert(220, m=2, seed=7)
+JTOP = barabasi_albert(96, m=2, seed=3)      # small: keeps jit compiles fast
+PA = SimParams(seed=11)
+
+_PARITY_FIELDS = ("n_reached", "n_edges_pq", "m_fw", "m_bw", "m_rt",
+                  "b_fw", "b_bw", "b_rt", "response_time_s", "accuracy")
+
+# one spec per RNG mode: shared batch-of-1 and the independent/seeded
+# modes coalesce; the shared multi-entry spec must run solo
+MIXED_SPECS = [
+    QuerySpec(origins=(0,), seed=3),                       # shared, 1 entry
+    QuerySpec(origins=(17,), seed=9),                      # shared, 1 entry
+    QuerySpec(origins=(5, 41), n_trials=2,
+              rng="independent", seed=2),                  # independent
+    QuerySpec(origins=(9,), n_trials=2, seeds=[[7, 19]]),  # seed grid
+    QuerySpec(origins=(3, 12), n_trials=2, seed=5),        # shared multi
+    QuerySpec(origins=(29,), seed=3),                      # shared, 1 entry
+]
+MIXED_POLS = ["fd-dynamic", "fd-dynamic", "fd-dynamic", "fd-dynamic",
+              "fd-dynamic", "cn"]
+
+
+def _assert_same_bits(a, b, ctx=""):
+    for f in _PARITY_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(a.metrics, f), getattr(b.metrics, f),
+            err_msg=f"{ctx}: field {f}")
+
+
+# --------------------------------------------------------------------------
+# Engine.run_many: batching changes scheduling, never bits
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_run_many_bit_exact_vs_sequential_all_rng_modes(backend):
+    top = TOP if backend == "numpy" else JTOP
+    engine = SimEngine(top, PA, backend=backend)
+    fused = engine.run_many(MIXED_SPECS, MIXED_POLS)
+    solo = [engine.run(s, p) for s, p in zip(MIXED_SPECS, MIXED_POLS)]
+    for i, (f, s) in enumerate(zip(fused, solo)):
+        _assert_same_bits(f, s, f"{backend} request {i}")
+    # the three coalescable fd-dynamic singles+grids fused; the shared
+    # multi-entry spec and the lone cn request did not
+    sizes = [r.batch_size for r in fused]
+    assert max(sizes) > 1, sizes
+    assert sizes[4] == 1            # shared multi-entry ran solo
+    assert all(isinstance(r, TopKResult) for r in fused)
+
+
+def test_run_many_mixed_policies_group_separately():
+    engine = SimEngine(TOP, PA)
+    specs = [QuerySpec(origins=(o,), seed=s)
+             for s, o in enumerate((0, 7, 42, 3, 12, 9))]
+    pols = ["fd-dynamic", "cn", "fd-dynamic", "cn", "fd-dynamic", "cn"]
+    fused = engine.run_many(specs, pols)
+    for f, spec, pol in zip(fused, specs, pols):
+        _assert_same_bits(f, engine.run(spec, pol), pol)
+        assert f.policy == pol
+        assert f.batch_size == 3    # 3 per policy group
+    # a single policy string broadcasts across all specs
+    one = engine.run_many(specs[:2], "cn-star")
+    assert [r.policy for r in one] == ["cn-star", "cn-star"]
+
+
+def test_run_many_policy_length_mismatch_raises():
+    engine = SimEngine(TOP, PA)
+    with pytest.raises(ValueError, match="2 specs but 1 policies"):
+        engine.run_many([QuerySpec(), QuerySpec()], ["cn"])
+
+
+def test_run_many_fd_stats_never_coalesces():
+    engine = SimEngine(TOP, PA)
+    specs = [QuerySpec(origins=(0,), seed=1),
+             QuerySpec(origins=(7,), seed=2)]
+    fused = engine.run_many(specs, "fd-stats")
+    for f, spec in zip(fused, specs):
+        assert f.batch_size == 1
+        ref = engine.run(spec, "fd-stats")
+        assert f.extras["comm_reduction"] == ref.extras["comm_reduction"]
+        assert f.extras["accuracy"] == ref.extras["accuracy"]
+
+
+def test_topkresult_serving_metadata_populated():
+    engine = SimEngine(TOP, PA)
+    res = engine.run(QuerySpec(origins=(0,), seed=1))
+    assert res.batch_size == 1 and res.queue_s == 0.0
+    assert res.run_s > 0.0 and res.compile_s >= 0.0
+    fused = engine.run_many(
+        [QuerySpec(origins=(o,), seed=i)
+         for i, o in enumerate((0, 7, 42))], "fd-dynamic")
+    assert all(r.batch_size == 3 for r in fused)
+    assert all(r.run_s > 0.0 for r in fused)
+
+
+def test_engine_abc_default_run_many_loops():
+    class Scalar(Engine):
+        backend = "scalar"
+
+        def run(self, spec=None, policy="fd-dynamic", **kw):
+            return SimEngine(TOP, PA).run(spec, policy)
+
+    out = Scalar().run_many([QuerySpec(origins=(0,), seed=1)] * 2, "cn")
+    assert [r.batch_size for r in out] == [1, 1]
+
+
+# --------------------------------------------------------------------------
+# QueryServer: queueing, shedding, timeouts, parity
+# --------------------------------------------------------------------------
+
+def test_server_serves_bits_identical_to_run():
+    engine = SimEngine(TOP, PA)
+    with QueryServer(engine) as server:
+        handles = [server.submit(s, p)
+                   for s, p in zip(MIXED_SPECS, MIXED_POLS)]
+        results = [h.result(timeout=60) for h in handles]
+        m = server.metrics()
+    for i, (res, spec, pol) in enumerate(
+            zip(results, MIXED_SPECS, MIXED_POLS)):
+        _assert_same_bits(res, engine.run(spec, pol), f"request {i}")
+        assert res.queue_s >= 0.0
+    assert m["served"] == len(MIXED_SPECS)
+    assert sum(m["batch_hist"].values()) == len(MIXED_SPECS)
+
+
+def test_server_sheds_deterministically_at_queue_bound():
+    # submit before start(): the queue fills with the dispatcher idle,
+    # so exactly max_queue requests are admitted and the next one sheds
+    server = QueryServer(SimEngine(TOP, PA),
+                         ServerConfig(max_queue=4))
+    handles = [server.submit(QuerySpec(origins=(i,), seed=i), "cn")
+               for i in range(4)]
+    with pytest.raises(ServerOverloaded, match="queue full"):
+        server.submit(QuerySpec(origins=(9,), seed=9), "cn")
+    server.start()
+    assert all(h.result(timeout=60) is not None for h in handles)
+    m = server.metrics()
+    assert m["shed"] == 1 and m["served"] == 4
+    server.stop()
+
+
+def test_server_times_out_expired_requests_at_dispatch():
+    engine = SimEngine(TOP, PA)
+    with QueryServer(engine) as server:
+        h = server.submit(QuerySpec(origins=(0,), seed=1), "cn",
+                          timeout_s=0)      # deadline already passed
+        with pytest.raises(RequestTimeout):
+            h.result(timeout=60)
+        assert h.done() and isinstance(h.exception(), RequestTimeout)
+        ok = server.query(QuerySpec(origins=(0,), seed=1), "cn")
+        m = server.metrics()
+    assert m["timed_out"] == 1 and m["served"] == 1
+    _assert_same_bits(ok, engine.run(QuerySpec(origins=(0,), seed=1),
+                                     "cn"))
+
+
+def test_server_default_timeout_from_config():
+    server = QueryServer(SimEngine(TOP, PA),
+                         ServerConfig(default_timeout_s=0.0))
+    h = server.submit(QuerySpec(origins=(0,), seed=1), "cn")
+    server.start()
+    with pytest.raises(RequestTimeout):
+        h.result(timeout=60)
+    server.stop()
+
+
+def test_server_drains_queue_on_stop_and_then_refuses():
+    server = QueryServer(SimEngine(TOP, PA))
+    hs = [server.submit(QuerySpec(origins=(i,), seed=i), "cn")
+          for i in range(3)]
+    server.start()
+    server.stop()                     # drain=True: pending work finishes
+    assert all(h.done() for h in hs)
+    assert [h.result() is not None for h in hs] == [True] * 3
+    with pytest.raises(ServerClosed):
+        server.submit(QuerySpec(), "cn")
+
+
+def test_server_batches_concurrent_requests_onto_one_sweep():
+    server = QueryServer(SimEngine(TOP, PA),
+                         ServerConfig(batch_window_s=0.05))
+    hs = [server.submit(QuerySpec(origins=(o,), seed=i), "fd-dynamic")
+          for i, o in enumerate((0, 7, 42, 99, 3, 12, 5, 31))]
+    server.start()                    # whole backlog dispatched at once
+    results = [h.result(timeout=60) for h in hs]
+    m = server.metrics()
+    assert max(r.batch_size for r in results) > 1
+    assert m["mean_batch"] > 1.0 and m["max_batch"] > 1
+    assert m["latency"]["p99_s"] >= m["latency"]["p50_s"]
+    server.stop()
+
+
+def test_server_multi_engine_routing():
+    engines = {"a": SimEngine(TOP, PA), "b": SimEngine(JTOP, PA)}
+    with QueryServer(engines) as server:
+        ra = server.query(QuerySpec(origins=(0,), seed=1), "cn",
+                          engine="a")
+        rb = server.query(QuerySpec(origins=(0,), seed=1), "cn",
+                          engine="b")
+        with pytest.raises(ValueError, match="name one"):
+            server.submit(QuerySpec(), "cn")      # ambiguous
+        with pytest.raises(KeyError, match="unknown engine"):
+            server.submit(QuerySpec(), "cn", engine="zz")
+    _assert_same_bits(ra, engines["a"].run(QuerySpec(origins=(0,),
+                                                     seed=1), "cn"))
+    assert not np.array_equal(ra.metrics.n_reached, rb.metrics.n_reached)
+
+
+def test_server_warm_populates_plan_before_load():
+    engine = SimEngine(TOP, PA)
+    server = QueryServer(engine)
+    res = server.warm(QuerySpec(origins=(0,), seed=1), "fd-dynamic")
+    assert res.batch_size == 1
+    assert engine.plan.cache_info()["origin_statics"] >= 1
+    server.stop()
+
+
+def test_server_propagates_engine_errors_to_the_handle():
+    with QueryServer(SimEngine(TOP, PA)) as server:
+        h = server.submit(QuerySpec(origins=(10 ** 9,), seed=1), "cn")
+        with pytest.raises(Exception):
+            h.result(timeout=60)
+        ok = server.query(QuerySpec(origins=(0,), seed=1), "cn")
+    assert ok is not None and server.metrics()["failed"] == 1
+
+
+# --------------------------------------------------------------------------
+# deprecated shims
+# --------------------------------------------------------------------------
+
+def test_legacy_shims_emit_deprecation_warnings():
+    from repro.p2psim import (run_queries, run_query,
+                              run_statistics_heuristic)
+    with pytest.warns(DeprecationWarning, match="SimEngine"):
+        met, _ = run_query(TOP, 0, PA)
+    with pytest.warns(DeprecationWarning, match="QuerySpec"):
+        bm = run_queries(TOP, [0], PA, 1)
+    with pytest.warns(DeprecationWarning, match="fd-stats"):
+        run_statistics_heuristic(TOP, 0, PA, 0.8)
+    # deprecation must not change bits: shim == engine
+    res = SimEngine(TOP, PA).run(QuerySpec(origins=(0,)), "fd-dynamic")
+    assert res.query_metrics(0, 0) == met
+    np.testing.assert_array_equal(bm.m_fw, res.metrics.m_fw)
+
+
+# --------------------------------------------------------------------------
+# launch entrypoint
+# --------------------------------------------------------------------------
+
+def test_launch_overlay_serves_mixed_stream():
+    from repro.launch import serve as serve_mod
+    metrics = serve_mod.main([
+        "overlay", "--topology", "ba,small-world", "--n-peers", "200",
+        "--requests", "24", "--concurrency", "8",
+        "--policies", "fd-dynamic,cn", "--batch-window-ms", "5"])
+    assert metrics["served"] == 24
+    assert metrics["shed"] == 0 and metrics["timed_out"] == 0
+    assert metrics["throughput_qps"] > 0
+    assert metrics["max_batch"] >= 1
+    assert metrics["latency"]["p50_s"] > 0
+
+
+# --------------------------------------------------------------------------
+# DeviceEngine.run_many: stacked collective == per-request calls
+# --------------------------------------------------------------------------
+
+def test_device_engine_run_many_batches_bit_exact(devices8):
+    out = devices8("""
+import jax, numpy as np
+from repro.engine import DeviceEngine, QuerySpec
+from repro.jaxcompat import make_mesh
+
+mesh = make_mesh((8,), ("model",))
+eng = DeviceEngine(mesh)
+scores = [jax.random.normal(jax.random.PRNGKey(i), (1024,))
+          for i in range(4)]
+specs = [QuerySpec(k=20)] * 4
+pols = ["fd-dynamic", "fd-basic", "cn", "fd-st1"]   # fd-* share a group
+fused = eng.run_many(specs, pols, scores=scores)
+for i, (s, p) in enumerate(zip(scores, pols)):
+    solo = eng.run(QuerySpec(k=20), p, scores=s)
+    np.testing.assert_array_equal(np.asarray(fused[i].values),
+                                  np.asarray(solo.values))
+    np.testing.assert_array_equal(np.asarray(fused[i].indices),
+                                  np.asarray(solo.indices))
+sizes = [r.batch_size for r in fused]
+assert sizes[0] == 3 and sizes[1] == 3 and sizes[3] == 3, sizes
+assert sizes[2] == 1                       # cn lowers to its own program
+assert all(r.run_s > 0 for r in fused)
+try:
+    eng.run_many(specs, pols, scores=scores[:2])
+    raise SystemExit("scores length mismatch must raise")
+except ValueError:
+    pass
+print("DEVICE_RUN_MANY_OK")
+""")
+    assert "DEVICE_RUN_MANY_OK" in out
