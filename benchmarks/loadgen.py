@@ -141,7 +141,7 @@ def _stage_row(engines, reqs, concurrency: int, backend: str,
         if not _metrics_equal(res.metrics, ref.metrics):
             parity = False
             break
-    hist = m["batch_hist"]
+    hist = m.batch_hist
     n_hist = sum(hist.values())
     batched_frac = (sum(c for s, c in hist.items() if s > 1)
                     / max(n_hist, 1))
@@ -155,11 +155,11 @@ def _stage_row(engines, reqs, concurrency: int, backend: str,
         "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
         "p95_ms": round(float(np.percentile(lat_ms, 95)), 3),
         "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
-        "mean_batch": round(m["mean_batch"], 3),
-        "max_batch": int(m["max_batch"]),
+        "mean_batch": round(m.mean_batch, 3),
+        "max_batch": int(m.max_batch),
         "batched_frac": round(batched_frac, 3),
-        "shed": m["shed"], "timed_out": m["timed_out"],
-        "parity": parity, "batched": m["max_batch"] > 1,
+        "shed": m.shed, "timed_out": m.timed_out,
+        "parity": parity, "batched": m.max_batch > 1,
     }
 
 

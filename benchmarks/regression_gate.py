@@ -43,6 +43,16 @@ must carry BOTH the ``parity`` bit
 server that serves correct bits without ever coalescing fails the
 gate, as does one that batches fast but wrong.
 
+The ``overlay_dynamics`` / ``overlay_churn`` / ``overlay_replication``
+rows (ISSUE 9, produced by ``benchmarks/overlay_dynamics.py`` into
+``BENCH_overlay_dynamics.json``) gate the live-overlay path: a single
+join/leave must sync a warmed 100k-peer plan >= 5x faster than a
+from-scratch rebuild (20k in ``--fast``; 40% band — wall-clock ratio),
+batched churn must still beat the rebuild (>= 1x), and every row —
+including the parity-only replication recall/traffic rows — must carry
+the bit-exactness parity bit (synced plan == rebuilt plan == scalar
+reference across backends and RNG modes; see docs/OVERLAY.md).
+
 Rows are matched on (suite + identity params); a baseline acceptance
 row with no matching current row is itself a failure, so suites cannot
 silently disappear.
@@ -70,11 +80,16 @@ _KEYS = {
     "topology_sweep": ("topology", "latency_model", "n_peers", "k",
                        "n_queries", "n_trials"),
     "serving": ("backend", "concurrency", "n_requests"),
+    "overlay_dynamics": ("event", "n_peers"),
+    "overlay_churn": ("events_per_sync", "n_peers"),
+    "overlay_replication": ("replication_factor", "placement", "n_peers"),
 }
 _FLOORS = {"speedup": 10.0, "plan_cache": 1.0, "jax_backend": 3.0,
-           "jax_churn": 3.0, "serving": 25.0}
+           "jax_churn": 3.0, "serving": 25.0, "overlay_dynamics": 5.0,
+           "overlay_churn": 1.0}
 _PARITY_SUITES = ("jax_backend", "jax_churn", "topology_sweep",
-                  "serving")
+                  "serving", "overlay_dynamics", "overlay_churn",
+                  "overlay_replication")
 # gated value field per suite (default: the "speedup" ratio); serving
 # rows gate an absolute throughput instead
 _VALUE_FIELD = {"serving": "throughput_qps"}
@@ -82,14 +97,18 @@ _VALUE_FIELD = {"serving": "throughput_qps"}
 _REQUIRED_BITS = {"serving": ("batched",)}
 # suites gated on presence + parity only (no speedup floor/band): the
 # numpy-vs-jax ratio on CI CPUs is noise, the bit-exactness is the
-# contract
-_PARITY_ONLY = ("topology_sweep",)
+# contract; the replication rows measure recall/traffic trade-offs,
+# not a speedup, so only their cross-backend parity gates
+_PARITY_ONLY = ("topology_sweep", "overlay_replication")
 # per-suite minimum tolerance: the churn rows divide two wall-clock
 # measurements whose run-to-run swing on 2-core CI runners exceeds the
 # default 20% band (observed 6.1x-8.5x for the same build), so the
 # relative check uses a wider band there; the absolute 3x floor and the
-# parity bit still gate every run
-_SUITE_TOLERANCE = {"jax_churn": 0.40, "serving": 0.50}
+# parity bit still gate every run.  Same story for the overlay sync-vs-
+# rebuild ratios (two wall clocks; the 5x / 1x absolute floors are the
+# real contract)
+_SUITE_TOLERANCE = {"jax_churn": 0.40, "serving": 0.50,
+                    "overlay_dynamics": 0.40, "overlay_churn": 0.40}
 
 
 def _parity_only(suite: str, row: dict) -> bool:

@@ -142,7 +142,7 @@ with QueryServer(engine, ServerConfig(max_batch=8)) as server:
     m = server.metrics()
 assert all(np.array_equal(r.metrics.b_fw, s.metrics.b_fw)
            for r, s in zip(results, solo))
-print(f"[serve] QueryServer served {m['served']}/8, mean batch "
-      f"{m['mean_batch']:.1f}, p50 latency "
-      f"{m['latency']['p50_s'] * 1e3:.1f} ms")
+print(f"[serve] QueryServer served {m.served}/8, mean batch "
+      f"{m.mean_batch:.1f}, p50 latency "
+      f"{m.latency.p50_s * 1e3:.1f} ms")
 print("engine quickstart OK")

@@ -30,16 +30,24 @@ from repro.engine.api import (Engine, Policy, QuerySpec,  # noqa: F401
                               TopKResult, available_policies, get_policy,
                               policy_from_legacy, register_policy)
 from repro.engine.plan import NetworkPlan  # noqa: F401
-from repro.engine.serve import (QueryHandle, QueryServer,  # noqa: F401
-                                RequestTimeout, ServerClosed, ServerConfig,
-                                ServerError, ServerOverloaded)
+from repro.engine.serve import (LatencyStats, PhaseStats,  # noqa: F401
+                                QueryHandle, QueryServer, RequestTimeout,
+                                ServerClosed, ServerConfig, ServerError,
+                                ServerMetrics, ServerOverloaded)
 from repro.engine.sim import SimEngine  # noqa: F401
+from repro.p2psim.overlay import (Overlay, SessionEvent,  # noqa: F401
+                                  apply_events, available_repairs,
+                                  get_repair, random_session,
+                                  register_repair)
 
 __all__ = ["QuerySpec", "Policy", "TopKResult", "NetworkPlan", "Engine",
            "SimEngine", "DeviceEngine", "QueryServer", "QueryHandle",
            "ServerConfig", "ServerError", "ServerOverloaded",
-           "RequestTimeout", "ServerClosed", "available_policies",
-           "get_policy", "policy_from_legacy", "register_policy"]
+           "RequestTimeout", "ServerClosed", "ServerMetrics",
+           "LatencyStats", "PhaseStats", "Overlay", "SessionEvent",
+           "random_session", "apply_events", "available_policies",
+           "get_policy", "policy_from_legacy", "register_policy",
+           "register_repair", "get_repair", "available_repairs"]
 
 
 def __getattr__(name):

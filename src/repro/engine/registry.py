@@ -1,0 +1,35 @@
+"""One surface over every name registry the reproduction exposes.
+
+Four registries follow the same ``register_* / get_* / available_*``
+idiom; this module re-exports them so callers (and ``QuerySpec``-style
+string configs) resolve every kind of name through one import:
+
+  * **policies** (``repro.engine.api``) — query-execution policies
+    ("fd-dynamic", "cn", ...) run by the engines;
+  * **topologies** (``repro.p2psim.topologies``) — overlay generators
+    ("ba", "waxman", "hierarchical", ...);
+  * **repairs** (``repro.p2psim.overlay``) — overlay self-healing
+    policies ("none", "reconnect") run by ``Overlay.remove_peer``;
+  * **placements** (``repro.p2psim.simulate``) — replica placement
+    policies ("random", "neighbor") named by
+    ``SimParams.replication_placement``.
+
+    from repro.engine import registry
+    registry.get_repair("reconnect")
+    registry.available_placements()          # ('neighbor', 'random')
+"""
+from repro.engine.api import (available_policies,  # noqa: F401
+                              get_policy, register_policy)
+from repro.p2psim.overlay import (available_repairs,  # noqa: F401
+                                  get_repair, register_repair)
+from repro.p2psim.simulate import (available_placements,  # noqa: F401
+                                   get_placement, register_placement)
+from repro.p2psim.topologies import (available_topologies,  # noqa: F401
+                                     get_topology, register_topology)
+
+__all__ = [
+    "register_policy", "get_policy", "available_policies",
+    "register_topology", "get_topology", "available_topologies",
+    "register_repair", "get_repair", "available_repairs",
+    "register_placement", "get_placement", "available_placements",
+]

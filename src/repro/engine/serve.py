@@ -37,7 +37,7 @@ asserted by tests/test_serving.py and the ``serving`` benchmark suite).
         handles = [server.submit(QuerySpec(origins=(o,), seed=s), "cn")
                    for s, o in enumerate(origins)]
         results = [h.result(timeout=5) for h in handles]
-    server.metrics()["batch_hist"]             # {sweep size: count}
+    server.metrics().batch_hist                # {sweep size: count}
 
 ``benchmarks/loadgen.py`` drives this layer at ramping concurrency and
 emits the ``BENCH_serving.json`` suite; ``python -m repro.launch.serve
@@ -70,6 +70,74 @@ class RequestTimeout(ServerError):
 
 class ServerClosed(ServerError):
     """The server was stopped before the request could execute."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    """Submit-to-completion latency percentiles over served requests."""
+
+    mean_s: float
+    p50_s: float
+    p95_s: float
+    p99_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseStats:
+    """Mean / max of one per-request phase timing (queue wait, run)."""
+
+    mean: float
+    max: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerMetrics:
+    """Typed snapshot of :meth:`QueryServer.metrics`.
+
+    Counters count REQUESTS (``submitted`` includes everything accepted
+    into the queue; ``shed`` requests were never queued).  ``batch_hist``
+    histograms ``TopKResult.batch_size`` over served requests — how many
+    requests shared each executed sweep; ``dispatch_hist`` histograms
+    how many requests each dispatcher cycle pulled.  ``latency`` /
+    ``queue_s`` / ``run_s`` are ``None`` until a request completes.
+
+    ``as_dict()`` is the back-compat escape hatch: it returns exactly
+    the flat dict the pre-typed ``metrics()`` produced (timing keys
+    absent when no request has completed), so existing JSON emitters
+    keep working unchanged.
+    """
+
+    submitted: int
+    served: int
+    shed: int
+    timed_out: int
+    failed: int
+    queue_depth: int
+    max_queue_depth: int
+    batch_hist: Dict[int, int]
+    dispatch_hist: Dict[int, int]
+    mean_batch: float
+    max_batch: int
+    latency: Optional[LatencyStats] = None
+    queue_s: Optional[PhaseStats] = None
+    run_s: Optional[PhaseStats] = None
+
+    def as_dict(self) -> dict:
+        """The legacy flat-dict shape (see class docstring)."""
+        out = {
+            "submitted": self.submitted, "served": self.served,
+            "shed": self.shed, "timed_out": self.timed_out,
+            "failed": self.failed, "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "batch_hist": dict(self.batch_hist),
+            "dispatch_hist": dict(self.dispatch_hist),
+            "mean_batch": self.mean_batch, "max_batch": self.max_batch,
+        }
+        if self.latency is not None:
+            out["latency"] = dataclasses.asdict(self.latency)
+            out["queue_s"] = dataclasses.asdict(self.queue_s)
+            out["run_s"] = dataclasses.asdict(self.run_s)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -281,44 +349,40 @@ class QueryServer:
         name = self._resolve_engine(engine)
         return self.engines[name].run(spec, policy, **kwargs)
 
-    def metrics(self) -> dict:
-        """Snapshot of the serving counters and timing aggregates.
-
-        ``batch_hist`` histograms ``TopKResult.batch_size`` over served
-        requests (how many requests shared each executed sweep);
-        ``dispatch_hist`` histograms how many requests each dispatcher
-        cycle pulled; ``latency`` holds submit-to-completion
-        percentiles; ``queue_s`` / ``run_s`` aggregate the per-request
-        phase timings.
-        """
+    def metrics(self) -> ServerMetrics:
+        """Snapshot of the serving counters and timing aggregates as a
+        typed :class:`ServerMetrics` (``.as_dict()`` recovers the old
+        flat-dict shape)."""
         with self._lock:
             counters = dict(self._counters)
             hist = dict(self._batch_hist)
             dispatch = dict(self._dispatch_sizes)
             depth_max = self._max_queue_depth
             rec = list(self._records)
-        out = dict(counters)
-        out["queue_depth"] = self._queue.qsize()
-        out["max_queue_depth"] = depth_max
-        out["batch_hist"] = hist
-        out["dispatch_hist"] = dispatch
         n = sum(hist.values())
-        out["mean_batch"] = (sum(s * c for s, c in hist.items()) / n
-                             if n else 0.0)
-        out["max_batch"] = max(hist) if hist else 0
+        latency = queue_s = run_s = None
         if rec:
             arr = np.asarray(rec)
-            out["latency"] = {
-                "mean_s": float(arr[:, 0].mean()),
-                "p50_s": float(np.percentile(arr[:, 0], 50)),
-                "p95_s": float(np.percentile(arr[:, 0], 95)),
-                "p99_s": float(np.percentile(arr[:, 0], 99)),
-            }
-            out["queue_s"] = {"mean": float(arr[:, 1].mean()),
-                              "max": float(arr[:, 1].max())}
-            out["run_s"] = {"mean": float(arr[:, 2].mean()),
-                            "max": float(arr[:, 2].max())}
-        return out
+            latency = LatencyStats(
+                mean_s=float(arr[:, 0].mean()),
+                p50_s=float(np.percentile(arr[:, 0], 50)),
+                p95_s=float(np.percentile(arr[:, 0], 95)),
+                p99_s=float(np.percentile(arr[:, 0], 99)))
+            queue_s = PhaseStats(mean=float(arr[:, 1].mean()),
+                                 max=float(arr[:, 1].max()))
+            run_s = PhaseStats(mean=float(arr[:, 2].mean()),
+                               max=float(arr[:, 2].max()))
+        return ServerMetrics(
+            submitted=counters["submitted"], served=counters["served"],
+            shed=counters["shed"], timed_out=counters["timed_out"],
+            failed=counters["failed"],
+            queue_depth=self._queue.qsize(),
+            max_queue_depth=depth_max,
+            batch_hist=hist, dispatch_hist=dispatch,
+            mean_batch=(sum(s * c for s, c in hist.items()) / n
+                        if n else 0.0),
+            max_batch=max(hist) if hist else 0,
+            latency=latency, queue_s=queue_s, run_s=run_s)
 
     # -- dispatcher --------------------------------------------------------
 

@@ -27,6 +27,7 @@ from repro.engine.api import (Engine, Policy, QuerySpec, TopKResult,
                               get_policy)
 from repro.engine.plan import NetworkPlan
 from repro.p2psim.graph import Topology
+from repro.p2psim.overlay import Overlay
 from repro.p2psim.metrics import QUERY_BYTES, BatchMetrics, QueryMetrics
 from repro.p2psim.simulate import (SimParams, _latency_mode,
                                    _run_entries, run_query_reference)
@@ -108,8 +109,15 @@ class SimEngine(Engine):
                 "TopKResult.backend_used)", RuntimeWarning, stacklevel=4)
         return "sim"
 
-    def prepare(self, top: Union[Topology, NetworkPlan]) -> NetworkPlan:
-        """Compile (or adopt) the overlay's NetworkPlan."""
+    def prepare(self, top: Union[Topology, Overlay, NetworkPlan]
+                ) -> NetworkPlan:
+        """Compile (or adopt) the overlay's NetworkPlan.
+
+        Passing a live :class:`~repro.p2psim.overlay.Overlay` binds the
+        plan to it: every subsequent ``run`` / ``run_many`` re-resolves
+        the plan against the overlay's current version
+        (:meth:`NetworkPlan.sync` — incremental, not a recompile), so
+        the engine keeps serving while the network churns."""
         self.plan = top if isinstance(top, NetworkPlan) else NetworkPlan(top)
         return self.plan
 
@@ -229,6 +237,8 @@ class SimEngine(Engine):
         """Run one (already resolved) spec on the prepared overlay."""
         if self.plan is None:
             raise RuntimeError("call SimEngine.prepare(topology) first")
+        if self.plan.overlay is not None:
+            self.plan.sync()              # live overlay: catch up by version
         _latency_mode(self.plan.top, p)   # validate model name + coords
         if pol.algorithm == "fd-stats":
             return self._run_stats(spec, pol, p)
@@ -244,6 +254,10 @@ class SimEngine(Engine):
         compile_s = time.perf_counter() - t0
         ent_st = np.repeat(st_of_q, T)
         ent_origin = np.repeat(origins, T)
+        # replica placement is retrieval-phase only (FD paths); the CN
+        # baselines never enter the owner-fetch fallback
+        rep = (None if pol.algorithm in ("cn", "cn_star")
+               else self.plan.replica_table(p))
         t0 = time.perf_counter()
         if self._backend == "jax":
             from repro.engine.sim_jax import run_entries_jax
@@ -251,13 +265,14 @@ class SimEngine(Engine):
                                   ent_seeds, self.plan.top.n, p,
                                   pol.algorithm, pol.dynamic,
                                   pol.lifetime_mean_s, spec.independent,
-                                  use_pallas=self._use_pallas)
+                                  use_pallas=self._use_pallas,
+                                  replicas=rep)
             used = "sim-jax"
         else:
             res = _run_entries(sts, ent_st, ent_origin, ent_seeds,
                                self.plan.top.n, p, pol.algorithm,
                                pol.dynamic, pol.lifetime_mean_s,
-                               spec.independent)
+                               spec.independent, replicas=rep)
             used = "sim"
         run_s = time.perf_counter() - t0
 

@@ -361,7 +361,8 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
                     ent_origin: np.ndarray, seeds, n: int, p: SimParams,
                     algorithm: str, dynamic: bool, lifetime_mean_s: float,
                     independent: bool,
-                    use_pallas: Optional[bool] = None) -> dict:
+                    use_pallas: Optional[bool] = None,
+                    replicas=None) -> dict:
     """Drop-in for the numpy ``_run_entries`` with jitted sweeps.
 
     Same contract, same outputs, same bits — see the module docstring.
@@ -493,8 +494,8 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
                           valid, k)
     if draws.exact:
         _retrieval_exact(out, draws, ent_origin, t_merge_done, mvals,
-                         mown, top_true_all, p)
+                         mown, top_true_all, p, replicas)
     else:
         _retrieval_shared(out, draws, ent_origin, t_merge_done, mvals,
-                          mown, top_true_all, p)
+                          mown, top_true_all, p, replicas)
     return out

@@ -197,19 +197,19 @@ def main_overlay(argv=None):
         for t in threads:
             t.join()
         wall = time.perf_counter() - t0
-        metrics = server.metrics()
-    metrics["wall_s"] = wall
-    metrics["throughput_qps"] = metrics["served"] / max(wall, 1e-9)
-    lat = metrics.get("latency", {})
-    print(f"served {metrics['served']}/{args.requests} requests over "
+        m = server.metrics()
+    qps = m.served / max(wall, 1e-9)
+    print(f"served {m.served}/{args.requests} requests over "
           f"{len(engines)} engine(s) [{args.backend}] in {wall:.2f}s "
-          f"({metrics['throughput_qps']:.1f} qps); shed "
-          f"{metrics['shed']}, timed out {metrics['timed_out']}")
-    if lat:
+          f"({qps:.1f} qps); shed {m.shed}, timed out {m.timed_out}")
+    if m.latency is not None:
         print("latency p50/p95/p99 = "
-              f"{lat['p50_s'] * 1e3:.2f}/{lat['p95_s'] * 1e3:.2f}/"
-              f"{lat['p99_s'] * 1e3:.2f} ms; mean batch "
-              f"{metrics['mean_batch']:.2f} (max {metrics['max_batch']})")
+              f"{m.latency.p50_s * 1e3:.2f}/{m.latency.p95_s * 1e3:.2f}/"
+              f"{m.latency.p99_s * 1e3:.2f} ms; mean batch "
+              f"{m.mean_batch:.2f} (max {m.max_batch})")
+    metrics = m.as_dict()
+    metrics["wall_s"] = wall
+    metrics["throughput_qps"] = qps
     return metrics
 
 

@@ -1,7 +1,11 @@
 from repro.p2psim.graph import Topology, barabasi_albert, waxman  # noqa: F401
 from repro.p2psim.metrics import BatchMetrics, QueryMetrics  # noqa: F401
+from repro.p2psim.overlay import (  # noqa: F401
+    Overlay, OverlayDelta, SessionEvent, apply_events, available_repairs,
+    get_repair, random_session, register_repair)
 from repro.p2psim.simulate import (  # noqa: F401
-    SimParams, run_queries, run_query, run_query_reference,
+    SimParams, available_placements, build_replica_table, get_placement,
+    register_placement, run_queries, run_query, run_query_reference,
     run_statistics_heuristic)
 from repro.p2psim.topologies import (  # noqa: F401
     TopologySpec, available_topologies, build_topology, get_topology,

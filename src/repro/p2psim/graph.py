@@ -224,7 +224,7 @@ def directed_edges(indptr: np.ndarray, indices: np.ndarray):
 
 
 def bfs_tree_csr(indptr: np.ndarray, indices: np.ndarray, origin: int,
-                 ttl: int):
+                 ttl: int, return_rank: bool = False):
     """Vectorized-per-level BFS, bit-for-bit identical to ``bfs_tree``.
 
     ``bfs_tree`` assigns ``parent[v]`` to the FIRST toucher — iterating
@@ -232,11 +232,23 @@ def bfs_tree_csr(indptr: np.ndarray, indices: np.ndarray, origin: int,
     same tie-break is reproduced here as the minimum position in the
     concatenated frontier-neighbor gather, so every downstream quantity
     (tree edges, wait times, merges) matches the scalar path exactly.
+
+    With ``return_rank=True`` a fourth float64 array is returned:
+    ``rank[v]`` = v's discovery index WITHIN ITS LEVEL (the frontier
+    order), -1 for unreached nodes.  Ranks are only meaningful compared
+    between same-depth nodes; they are the first-touch certificate the
+    live-overlay tree patch (``repro.engine.plan``) uses to decide
+    claim priority without re-running the sweep (float so patched-in
+    joins can take fractional slots between existing claims).
     """
     n = len(indptr) - 1
     parent = -np.ones(n, dtype=np.int64)
     depth = -np.ones(n, dtype=np.int64)
     depth[origin] = 0
+    rank = None
+    if return_rank:
+        rank = -np.ones(n, dtype=np.float64)
+        rank[origin] = 0.0
     frontier = np.array([origin], dtype=np.int64)
     # first-touch position scratch, allocated once; only the entries a
     # level touches are reset afterwards
@@ -264,14 +276,19 @@ def bfs_tree_csr(indptr: np.ndarray, indices: np.ndarray, origin: int,
         order_new = uniq[np.argsort(first[uniq])]   # discovery order
         parent[order_new] = src[first[order_new]]
         depth[order_new] = lvl + 1
+        if rank is not None:
+            rank[order_new] = np.arange(len(order_new), dtype=np.float64)
         first[uniq] = sentinel
         frontier = order_new
         lvl += 1
+    if return_rank:
+        return parent, depth, depth >= 0, rank
     return parent, depth, depth >= 0
 
 
 def bfs_tree_csr_multi(indptr: np.ndarray, indices: np.ndarray,
-                       origins: np.ndarray, ttl: int):
+                       origins: np.ndarray, ttl: int,
+                       return_rank: bool = False):
     """``bfs_tree_csr`` for MANY origins in one sweep.
 
     Returns (parent, depth, reached) each shaped (len(origins), n), row o
@@ -280,18 +297,27 @@ def bfs_tree_csr_multi(indptr: np.ndarray, indices: np.ndarray,
     first-touch tie-breaks are preserved because candidate positions are
     only compared within the same (origin, node) key and the flattened
     frontier keeps every origin's discovery order as a subsequence.
+    ``return_rank=True`` appends the per-origin within-level discovery
+    ranks, row-for-row equal to the single-origin ones.
     """
     n = len(indptr) - 1
     S = len(origins)
     parent = -np.ones((S, n), dtype=np.int64)
     depth = -np.ones((S, n), dtype=np.int64)
+    dflat = depth.reshape(-1)            # flat views: 1-d gathers are
+    pflat = parent.reshape(-1)           # far cheaper than 2-d fancy ones
+    rank = kflat = None
+    if return_rank:
+        rank = -np.ones((S, n), dtype=np.float64)
+        kflat = rank.reshape(-1)
     ar = np.arange(S)
     depth[ar, origins] = 0
+    if rank is not None:
+        rank[ar, origins] = 0.0
     fr_org = ar.copy()
     fr_node = np.asarray(origins, dtype=np.int64).copy()
-    # first-touch scratch allocated once (S*n); only touched keys reset
-    sentinel = np.iinfo(np.int64).max
-    first = np.full(S * n, sentinel, dtype=np.int64)
+    # int32 sort keys radix-sort when the (origin, node) space fits
+    kdt = np.int32 if S * n < 2**31 else np.int64
     lvl = 0
     while len(fr_node) and lvl < ttl:
         starts = indptr[fr_node]
@@ -304,22 +330,41 @@ def bfs_tree_csr_multi(indptr: np.ndarray, indices: np.ndarray,
         cand = indices[np.repeat(starts, counts) + pos_in_row]
         src = np.repeat(fr_node, counts)
         org = np.repeat(fr_org, counts)
-        new = depth[org, cand] < 0
-        cand_new = cand[new]
-        if len(cand_new) == 0:
+        keyall = org * n + cand
+        new = dflat[keyall] < 0
+        key = keyall[new].astype(kdt)
+        if len(key) == 0:
             break
         pos = np.flatnonzero(new)
-        key = org[new] * n + cand_new
-        np.minimum.at(first, key, pos)
-        ukey = np.unique(key)
-        order_new = ukey[np.argsort(first[ukey])]   # global discovery order
-        uorg = order_new // n
-        unode = order_new % n
-        parent[uorg, unode] = src[first[order_new]]
-        depth[uorg, unode] = lvl + 1
-        first[ukey] = sentinel
-        fr_org, fr_node = uorg, unode
+        # grouped first-touch: stable (radix) sort by key keeps
+        # candidate positions ascending within each (origin, node)
+        # group, so the group leader IS the minimum position —
+        # bit-identical to a minimum-reduce, without its scatter cost
+        order = np.argsort(key, kind="stable")
+        ks = key[order]
+        lead = np.empty(len(ks), bool)
+        lead[0] = True
+        np.not_equal(ks[1:], ks[:-1], out=lead[1:])
+        fpos = pos[order[lead]]          # min position per distinct key
+        # positions are distinct, so the stable (radix) sort is exact
+        dord = np.argsort(fpos.astype(kdt) if total < 2**31 else fpos,
+                          kind="stable") # global discovery order
+        okey = ks[lead][dord].astype(np.int64)
+        pflat[okey] = src[fpos[dord]]
+        dflat[okey] = lvl + 1
+        if kflat is not None:
+            # per-origin within-level rank: stable sort by origin keeps
+            # the global discovery order inside each origin's group
+            uorg = okey // n
+            o2 = np.argsort(uorg, kind="stable")
+            grp = uorg[o2]
+            within = (np.arange(len(grp), dtype=np.int64)
+                      - np.searchsorted(grp, grp))
+            kflat[okey[o2]] = within.astype(np.float64)
+        fr_org, fr_node = okey // n, okey % n
         lvl += 1
+    if return_rank:
+        return parent, depth, depth >= 0, rank
     return parent, depth, depth >= 0
 
 

@@ -23,14 +23,16 @@ directly to the originator.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
+import os
 import warnings
 from typing import Optional
 
 import numpy as np
 
-from repro.p2psim.graph import Topology, bfs_tree, bfs_tree_csr
+from repro.p2psim.graph import Topology, as_csr, bfs_tree, bfs_tree_csr
 from repro.p2psim.metrics import (ENTRY_BYTES_PAPER, QUERY_BYTES,
                                   BatchMetrics, QueryMetrics)
 
@@ -65,6 +67,17 @@ class SimParams:
     #          generator from repro.p2psim.topologies.  Bandwidths stay
     #          i.i.d. draws in both models.
     latency_model: str = "iid"
+    # Replication (survey-motivated churn mitigation): every peer's
+    # top-k items live on `replication_factor` additional peers, chosen
+    # by the registered `replication_placement` policy ("random" /
+    # "neighbor" — see register_placement).  At the FD retrieval phase a
+    # dead owner's items are fetched from its first alive replica; an
+    # item is lost only when the owner AND all its replicas are gone.
+    # The placement table is a deterministic property of the overlay
+    # (fixed internal seed, NOT the query stream), so `=0` leaves every
+    # drawn bit unchanged and the CN baselines are unaffected.
+    replication_factor: int = 0
+    replication_placement: str = "random"
 
 
 # --------------------------------------------------------------------------
@@ -139,6 +152,99 @@ def _tree_edge_latency(top: Topology, parent: np.ndarray) -> np.ndarray:
     safe = np.maximum(parent, 0)
     lat = top.pair_latency(np.arange(top.n), safe)
     return np.where(parent >= 0, lat, top.lat_base_s)
+
+
+# --------------------------------------------------------------------------
+# replication: placement registry + retrieval-fallback model
+# --------------------------------------------------------------------------
+
+# placement(indptr, indices, r, rng) -> (n, r) replica peer ids (-1 pad)
+_PLACEMENTS: dict = {}
+
+# the placement table is a property of the NETWORK, not of any query:
+# it is drawn from this fixed internal stream so every backend — and
+# every per-entry seed — sees the same table, and the query RNG streams
+# never move
+_PLACEMENT_STREAM = 0x5EED_0FAB
+
+
+def register_placement(name: str, fn) -> None:
+    """Register a replica placement policy under ``name``."""
+    _PLACEMENTS[name] = fn
+
+
+def get_placement(name: str):
+    """Look up a registered replica placement policy by name."""
+    try:
+        return _PLACEMENTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown replication placement {name!r}; registered: "
+            f"{available_placements()}") from None
+
+
+def available_placements() -> tuple:
+    """Registered placement-policy names, sorted."""
+    return tuple(sorted(_PLACEMENTS))
+
+
+def _place_random(indptr, indices, r: int, rng) -> np.ndarray:
+    """r uniform peers per owner (excluding the owner itself)."""
+    n = len(indptr) - 1
+    if n <= 1:
+        return np.full((n, r), -1, np.int64)
+    tab = np.empty((n, r), np.int64)
+    for j in range(r):
+        cand = rng.integers(0, n - 1, n)
+        cand += cand >= np.arange(n)         # skip the owner's own id
+        tab[:, j] = cand
+    return tab
+
+
+def _place_neighbor(indptr, indices, r: int, rng) -> np.ndarray:
+    """r uniform NEIGHBORS per owner (isolated owners get no replicas)."""
+    n = len(indptr) - 1
+    deg = np.diff(indptr)
+    tab = np.full((n, r), -1, np.int64)
+    for j in range(r):
+        raw = rng.integers(0, 1 << 62, n)
+        sel = raw % np.maximum(deg, 1)
+        tab[:, j] = np.where(deg > 0, indices[indptr[:-1] + sel], -1)
+    return tab
+
+
+register_placement("random", _place_random)
+register_placement("neighbor", _place_neighbor)
+
+
+def build_replica_table(indptr, indices, r: int,
+                        placement: str) -> np.ndarray:
+    """(n, r) replica peer ids per owner (-1 = unfilled slot).
+
+    Deterministic in (overlay CSR, r, placement) — the scalar
+    reference and the batched engines compute it from the same CSR
+    arrays, so replication never enters the cross-backend parity story
+    as anything but shared input data.
+    """
+    rng = np.random.default_rng(_PLACEMENT_STREAM + r)
+    return get_placement(placement)(indptr, indices, r, rng)
+
+
+def _serving_peers(owners: np.ndarray, replicas, death_row: np.ndarray,
+                   t: float) -> np.ndarray:
+    """Per owner: the peer that serves its items at time ``t`` — the
+    owner itself when alive, else its first alive replica, else -1
+    (items lost).  ``replicas`` is the (n, r) table or None."""
+    served = np.where(death_row[owners] > t, owners, -1)
+    if replicas is not None and replicas.shape[1] and len(owners):
+        need = served < 0
+        if need.any():
+            reps = replicas[owners[need]]                   # (m, r)
+            ok = (reps >= 0) & (death_row[np.maximum(reps, 0)] > t)
+            has = ok.any(axis=1)
+            first = reps[np.arange(len(reps)), ok.argmax(axis=1)]
+            served[need] = np.where(has, first, -1)
+    return served
 
 
 # --------------------------------------------------------------------------
@@ -431,21 +537,30 @@ def run_query_reference(top: Topology, origin: int = 0,
         merged_owner[origin] = allo[sel]
 
     # ---- data retrieval --------------------------------------------------
+    # a dead owner's items are fetched from its first alive replica
+    # (replication_factor > 0); `served[i]` is the peer that serves
+    # final owner i's items, or -1 when owner and all replicas are gone
     final_owners = np.unique(merged_owner[origin])
-    alive_owner = final_owners[death[final_owners] > t_merge_done]
-    met.m_rt = 2 * len(alive_owner)
+    replicas = None
+    if p.replication_factor > 0:
+        ip_, ix_ = as_csr(top)
+        replicas = build_replica_table(ip_, ix_, p.replication_factor,
+                                       p.replication_placement)
+    served = _serving_peers(final_owners, replicas, death, t_merge_done)
+    srv = served >= 0
+    met.m_rt = 2 * int(srv.sum())
     if edge_lat:
-        lat_o = top.pair_latency(origin, final_owners)
+        lat_o = top.pair_latency(origin,
+                                 np.where(srv, served, final_owners))
         bw_o = _draw_bw(rng, p, len(final_owners))
     else:
         lat_o, bw_o = _draw_link(rng, p, len(final_owners))
     per_owner_counts = np.array(
         [(merged_owner[origin] == o).sum() for o in final_owners])
     fetch_bytes = per_owner_counts * p.item_mean_B
-    met.b_rt = int(len(alive_owner) * p.request_B
-                   + fetch_bytes[death[final_owners] > t_merge_done].sum())
+    met.b_rt = int(srv.sum() * p.request_B + fetch_bytes[srv].sum())
     t_fetch = (2 * lat_o + (p.request_B + fetch_bytes) / bw_o)
-    t_fetch = t_fetch[death[final_owners] > t_merge_done]
+    t_fetch = t_fetch[srv]
     met.response_time_s = float(
         t_merge_done + (t_fetch.max() if len(t_fetch) else 0.0))
 
@@ -457,11 +572,10 @@ def run_query_reference(top: Topology, origin: int = 0,
     got = np.sort(merged_scores[origin])[::-1]
     # intersection by value (scores a.s. distinct)
     inter = np.intersect1d(top_true, got).size
-    # retrieval failures (dead owners) lose their items
-    dead_owned = np.isin(merged_owner[origin],
-                         final_owners[death[final_owners] <= t_merge_done])
+    # retrieval failures (owner + every replica dead) lose their items
+    lost_owned = np.isin(merged_owner[origin], final_owners[~srv])
     inter = max(0, inter - int(np.isin(
-        merged_scores[origin][dead_owned], top_true).sum()))
+        merged_scores[origin][lost_owned], top_true).sum()))
     met.accuracy = inter / p.k
 
     state = {"parent": parent, "depth": depth, "reached": reached,
@@ -478,6 +592,17 @@ def _accuracy(scores, idx, delivered, k) -> float:
         return 0.0
     got = np.sort(scores[deliv_idx].reshape(-1))[::-1][:k]
     return float(np.intersect1d(top_true, got).size) / k
+
+
+def _legacy_gate(message: str) -> None:
+    """Retired-shim gate: raise, unless ``REPRO_LEGACY_API=1`` opts back
+    into the old (warn-and-delegate) behavior for one more release."""
+    if os.environ.get("REPRO_LEGACY_API") == "1":
+        warnings.warn(message, DeprecationWarning, stacklevel=3)
+        return
+    raise RuntimeError(
+        f"{message} (the legacy entrypoints are retired; set "
+        "REPRO_LEGACY_API=1 to temporarily re-enable them)")
 
 
 def run_query(top: Topology, origin: int = 0,
@@ -499,11 +624,10 @@ def run_query(top: Topology, origin: int = 0,
        (``SimEngine(top, params).run(QuerySpec(origins=(origin,)),
        policy)``) — see the README migration table.
     """
-    warnings.warn(
+    _legacy_gate(
         "run_query is deprecated; use repro.engine.SimEngine with a "
         "QuerySpec: SimEngine(top, params).run(QuerySpec(origins="
-        "(origin,)), policy) — see the README migration table",
-        DeprecationWarning, stacklevel=2)
+        "(origin,)), policy) — see the README migration table")
     if child_mask is not None or return_state:
         return run_query_reference(
             top, origin, params, algorithm=algorithm, strategy=strategy,
@@ -731,18 +855,25 @@ class _OriginStatic:
                  fw_strategy: str, bfs=None, edge_lat=None):
         n = top.n
         if bfs is not None:           # precomputed by the multi-origin BFS
-            parent, depth, reached = bfs
+            parent, depth, reached = bfs[:3]
+            rank = bfs[3] if len(bfs) > 3 else None
             self.ttl = int(depth.max()) if ttl == 0 else ttl
         elif ttl == 0:
             # auto TTL = eccentricity: the full-depth BFS *is* the
             # TTL-limited BFS at that TTL, so reuse it
-            parent, depth, reached = bfs_tree_csr(indptr, indices, origin, n)
+            parent, depth, reached, rank = bfs_tree_csr(
+                indptr, indices, origin, n, return_rank=True)
             self.ttl = int(depth.max())
         else:
             self.ttl = ttl
-            parent, depth, reached = bfs_tree_csr(indptr, indices, origin,
-                                                  self.ttl)
+            parent, depth, reached, rank = bfs_tree_csr(
+                indptr, indices, origin, self.ttl, return_rank=True)
         self.parent, self.depth, self.reached = parent, depth, reached
+        # within-level discovery ranks: the first-touch certificate the
+        # live-overlay tree patch compares claims with (None only when a
+        # caller passed a rank-less bfs tuple; such statics fall back to
+        # the full BFS on every sync)
+        self.rank = rank
         self.origin = origin
         self.idx = np.flatnonzero(reached)
         self.ttl_rem = np.maximum(self.ttl - depth, 0)
@@ -755,6 +886,22 @@ class _OriginStatic:
         ordk = np.argsort(par, kind="stable")
         self.kid_sorted = childs[ordk]
         self.kid_ptr = np.searchsorted(par[ordk], np.arange(n + 1))
+        self.fw_strategy = fw_strategy
+        self.refresh_edges(top, e_src, e_dst, edge_keys, degrees, edge_lat)
+
+    def refresh_edges(self, top: Topology, e_src, e_dst, edge_keys,
+                      degrees, edge_lat) -> None:
+        """(Re)derive everything that reads the GLOBAL edge arrays.
+
+        The BFS tree (``parent`` / ``depth`` / ``reached`` / levels /
+        child CSR) only sees edges on the tree, but the forward-phase
+        masks, message counts, and latency gathers see every edge —
+        ``NetworkPlan.sync`` calls this after an edge delta that left
+        this origin's BFS tree unchanged, instead of rebuilding the
+        whole static."""
+        n = top.n
+        parent, depth, reached = self.parent, self.depth, self.reached
+        origin = self.origin
         self.n_edges_pq = int(((e_src < e_dst) & reached[e_src]
                                & reached[e_dst]).sum())
         self.avg_degree = float(np.mean(degrees[self.idx]))
@@ -773,7 +920,7 @@ class _OriginStatic:
         mask_u = reached & (self.ttl_rem > 0)
         self.m_basic = int(degrees[mask_u].sum() - mask_u.sum()
                            + int(mask_u[origin]))
-        self.fw_strategy = fw_strategy
+        fw_strategy = self.fw_strategy
         if fw_strategy == "basic":
             return
         pu_e = parent[e_src]
@@ -798,6 +945,226 @@ class _OriginStatic:
         self.fw_cond = ((parent[self.fw_els_src] == self.fw_els_dst)
                         | (depth[self.fw_els_dst]
                            <= depth[self.fw_els_src]))
+
+    def _classify_edges(self, pos, e_src, e_dst, edge_keys, base,
+                        parent, depth, reached, ttl_rem):
+        """refresh_edges' per-edge pipeline on a POSITION SUBSET.
+
+        Returns (u, v, unreach, tree, els) booleans per position —
+        exactly what the full pass would compute for those edges, so
+        the delta patch below can subtract old and add new
+        contributions without touching the rest."""
+        u = e_src[pos].astype(np.int64)
+        v = e_dst[pos].astype(np.int64)
+        pu = parent[u]
+        active = reached[u] & (ttl_rem[u] > 0) & (v != pu)
+        unreach = active & ~reached[v]
+        rest = active & reached[v]
+        if self.fw_strategy == "st1+2" and len(edge_keys):
+            m2 = rest & (pu >= 0)
+            key = pu * base + v
+            p_ = np.minimum(np.searchsorted(edge_keys, key[m2]),
+                            len(edge_keys) - 1)
+            member = np.zeros(len(u), bool)
+            member[m2] = edge_keys[p_] == key[m2]
+            rest = rest & ~member
+        tree = rest & (parent[v] == u)
+        return u, v, unreach, tree, rest & ~tree
+
+    @classmethod
+    def patched(cls, old: "_OriginStatic", top: Topology, indptr,
+                indices, e_src, e_dst, edge_keys, degrees,
+                requested_ttl: int, bfs, edge_lat, old_csr, removed,
+                added) -> Optional["_OriginStatic"]:
+        """Incremental rebuild for a SMALL tree delta — the live-overlay
+        fast path behind ``NetworkPlan.sync``.
+
+        ``bfs`` is the freshly recomputed (parent, depth, reached) on
+        the patched CSR; ``old_csr`` the pre-mutation
+        ``(n, indptr, indices, e_src, e_dst, edge_keys)``; ``removed``
+        / ``added`` the net undirected edge delta from the overlay
+        journal.  Wherever old and new BFS trees are bit-identical the
+        old static's compiled structure is adopted wholesale; only
+        levels, child-CSR rows, and per-edge classifications the delta
+        can reach are re-derived — including the Strategy-2 membership
+        coupling (an edge (p, w) appearing or vanishing re-classifies
+        edges (u, w) of p's tree children).  Returns None for large or
+        structural deltas (resolved TTL moved, origin departed, diff
+        beyond budget): the caller falls back to a full rebuild.  The
+        result is field-for-field equal to a from-scratch
+        ``_OriginStatic`` — asserted by the overlay fuzz tests and the
+        ``overlay_dynamics`` bench parity bit.
+        """
+        P, D, R = bfs[:3]
+        K = bfs[3] if len(bfs) > 3 else None
+        n = top.n
+        old_n, old_indptr, old_indices, old_e_src, old_e_dst, old_keys \
+            = old_csr
+        resolved = int(D.max()) if requested_ttl == 0 else requested_ttl
+        if old_n == n:
+            op_, od_ = old.parent, old.depth
+            or_, otr = old.reached, old.ttl_rem
+        else:                     # peers joined: pad the old view
+            pad = n - old_n
+            op_ = np.concatenate([old.parent,
+                                  np.full(pad, -1, old.parent.dtype)])
+            od_ = np.concatenate([old.depth,
+                                  np.full(pad, -1, old.depth.dtype)])
+            or_ = np.concatenate([old.reached, np.zeros(pad, bool)])
+            otr = np.maximum(old.ttl - od_, 0)
+        diff = np.flatnonzero((op_ != P) | (od_ != D))
+        # a moved resolved TTL shifts ttl_rem everywhere, but the edge
+        # classification only reads it through ``ttl_rem[u] > 0`` — the
+        # bit flips exactly for sources with depth in [min_ttl, max_ttl),
+        # so re-deriving THEIR out-edges (old and new basis) absorbs an
+        # eccentricity change without a full rebuild
+        if resolved == old.ttl:
+            tfl_old = tfl_new = np.zeros(0, np.int64)
+        else:
+            lo, hi = sorted((resolved, old.ttl))
+            tfl_old = np.flatnonzero((od_ >= lo) & (od_ < hi))
+            tfl_new = np.flatnonzero((D >= lo) & (D < hi))
+        budget = 64 + n // 128
+        if (len(diff) + len(tfl_old) + len(tfl_new) > budget
+                or len(removed) + len(added) > budget):
+            return None
+        st = copy.copy(old)
+        st.parent, st.depth, st.reached = P, D, R
+        st.rank = K
+        st.ttl = resolved
+        st.idx = np.flatnonzero(R)
+        st.ttl_rem = np.maximum(resolved - D, 0)
+
+        # ---- levels: recompute only depths the diff touches ------------
+        dmax = int(D.max())
+        touched = ({int(x) for x in od_[diff]}
+                   | {int(x) for x in D[diff]}) - {-1}
+        old_dmax = len(old.levels) - 1
+        st.levels = [old.levels[d]
+                     if (d <= old_dmax and d not in touched)
+                     else np.flatnonzero(D == d)
+                     for d in range(dmax + 1)]
+
+        # ---- children CSR: drop / re-insert only the diff nodes --------
+        kid = old.kid_sorted
+        gone = diff[(diff < old_n)]
+        gone = gone[op_[gone] >= 0]
+        if len(gone):
+            kid = kid[~np.isin(kid, gone)]
+        ins = diff[P[diff] >= 0]
+        if len(ins):
+            kk = P[kid] * np.int64(n) + kid
+            ik = P[ins] * np.int64(n) + ins
+            o_ = np.argsort(ik, kind="stable")
+            kid = np.insert(kid, np.searchsorted(kk, ik[o_]), ins[o_])
+        st.kid_sorted = kid
+        kp = np.zeros(n + 1, old.kid_ptr.dtype)
+        np.cumsum(np.bincount(P[kid], minlength=n), out=kp[1:])
+        st.kid_ptr = kp
+
+        # ---- affected directed-edge positions, old and new sides -------
+        def out_in_pos(nodes, indptr, indices, keys, base):
+            pos = [np.zeros(0, np.int64)]
+            for x in nodes:
+                lo, hi = int(indptr[x]), int(indptr[x + 1])
+                pos.append(np.arange(lo, hi, dtype=np.int64))  # out-edges
+                us = indices[lo:hi].astype(np.int64)           # in-edges
+                pos.append(np.searchsorted(keys, us * base + x))
+            return pos
+
+        def pair_pos(pairs, keys, base, lim):
+            out = [np.zeros(0, np.int64)]
+            for a, b in pairs:
+                if a >= lim or b >= lim:
+                    continue
+                k = np.array([a * base + b, b * base + a], np.int64)
+                p_ = np.searchsorted(keys, k)
+                ok = p_ < len(keys)
+                p_, k = p_[ok], k[ok]
+                out.append(p_[keys[p_] == k])
+            return out
+
+        # Strategy-2 coupling: delta edge (p, w) re-classifies (u, w)
+        # for u in p's tree children (old AND new tree)
+        coup = []
+        if old.fw_strategy == "st1+2":
+            for a, b in list(removed) + list(added):
+                for p, w in ((a, b), (b, a)):
+                    if p < old_n:
+                        cs = old.kid_sorted[old.kid_ptr[p]:
+                                            old.kid_ptr[p + 1]]
+                        coup.extend((int(u), w) for u in cs)
+                    cs = kid[kp[p]:kp[p + 1]]
+                    coup.extend((int(u), w) for u in cs)
+        diff_old = diff[diff < old_n]
+        A_old = [*out_in_pos(diff_old, old_indptr, old_indices,
+                             old_keys, old_n),
+                 *out_in_pos(tfl_old[tfl_old < old_n], old_indptr,
+                             old_indices, old_keys, old_n),
+                 *pair_pos(list(removed) + coup, old_keys, old_n, old_n)]
+        A_new = [*out_in_pos(diff, indptr, indices, edge_keys, n),
+                 *out_in_pos(tfl_new, indptr, indices, edge_keys, n),
+                 *pair_pos(list(added) + coup, edge_keys, n, n)]
+        A_old = np.unique(np.concatenate(A_old))
+        A_new = np.unique(np.concatenate(A_new))
+
+        # ---- O(n)-cheap aggregates: recompute outright -----------------
+        st.avg_degree = float(np.mean(degrees[st.idx]))
+        mask_u = R & (st.ttl_rem > 0)
+        st.m_basic = int(degrees[mask_u].sum() - mask_u.sum()
+                         + int(mask_u[old.origin]))
+
+        # ---- per-edge latency gathers ----------------------------------
+        if edge_lat is not None:
+            pl = (old.par_lat.copy() if old_n == n else np.concatenate(
+                [old.par_lat, np.full(n - old_n, top.lat_base_s)]))
+            pl[diff] = top.lat_base_s
+            ch = diff[P[diff] >= 0]
+            if len(ch):
+                pos = np.searchsorted(edge_keys,
+                                      ch * np.int64(n) + P[ch])
+                pl[ch] = edge_lat[pos]
+            st.par_lat = pl
+            st.origin_lat = (old.origin_lat if old_n == n
+                             else np.concatenate([
+                                 old.origin_lat,
+                                 top.pair_latency(old.origin,
+                                                  np.arange(old_n, n))]))
+
+        # ---- classify the affected edges, old vs new -------------------
+        uo, vo, uno, tro, elo = old._classify_edges(
+            A_old, old_e_src, old_e_dst, old_keys, old_n,
+            op_, od_, or_, otr)
+        un, vn, unn, trn, eln = st._classify_edges(
+            A_new, e_src, e_dst, edge_keys, n, P, D, R, st.ttl_rem)
+        mo, mn = uo < vo, un < vn
+        st.n_edges_pq = (old.n_edges_pq
+                         - int((or_[uo[mo]] & or_[vo[mo]]).sum())
+                         + int((R[un[mn]] & R[vn[mn]]).sum()))
+        if old.fw_strategy == "basic":
+            return st
+        st.fw_static = (old.fw_static - int(uno.sum() + tro.sum())
+                        + int(unn.sum() + trn.sum()))
+        # els content patch, (src, dst)-ascending order preserved:
+        # every affected pair is dropped, then the still-els ones are
+        # re-inserted at their sorted position with a fresh cond
+        n64 = np.int64(n)
+        ek = old.fw_els_src.astype(np.int64) * n64 + old.fw_els_dst
+        keep = ~np.isin(ek, uo * n64 + vo)
+        src = old.fw_els_src[keep]
+        dst = old.fw_els_dst[keep]
+        cond = old.fw_cond[keep]
+        iu, iv = un[eln], vn[eln]
+        if len(iu):
+            ik = iu * n64 + iv
+            o_ = np.argsort(ik, kind="stable")
+            iu, iv, ik = iu[o_], iv[o_], ik[o_]
+            p_ = np.searchsorted(ek[keep], ik)
+            src = np.insert(src, p_, iu.astype(src.dtype))
+            dst = np.insert(dst, p_, iv.astype(dst.dtype))
+            cond = np.insert(cond, p_, (P[iu] == iv) | (D[iv] <= D[iu]))
+        st.fw_els_src, st.fw_els_dst, st.fw_cond = src, dst, cond
+        return st
 
 
 def _entry_latencies(sts, ent_st: np.ndarray, p: SimParams):
@@ -825,7 +1192,7 @@ def _topk_remerge(mvals_row, mown_row, extra_v, extra_o, k):
 def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
                  seeds, n: int, p: SimParams, algorithm: str,
                  dynamic: bool, lifetime_mean_s: float,
-                 independent: bool) -> dict:
+                 independent: bool, replicas=None) -> dict:
     """Every (query, trial) entry at once — the flattened batch axis E.
 
     ``sts``: unique ``_OriginStatic`` list; ``ent_st[e]`` indexes into it.
@@ -1072,10 +1439,10 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
                           None if no_churn else valid, k)
     if draws.exact:
         _retrieval_exact(out, draws, ent_origin, t_merge_done, mvals,
-                         mown, top_true_all, p)
+                         mown, top_true_all, p, replicas)
     else:
         _retrieval_shared(out, draws, ent_origin, t_merge_done, mvals,
-                          mown, top_true_all, p)
+                          mown, top_true_all, p, replicas)
     return out
 
 
@@ -1182,45 +1549,58 @@ def _accept_urgent_origin(urgent, ent_origin: np.ndarray,
 def _retrieval_exact(out: dict, draws: EntryDraws, ent_origin: np.ndarray,
                      t_merge_done: np.ndarray, mvals: np.ndarray,
                      mown: np.ndarray, top_true_all: np.ndarray,
-                     p: SimParams) -> None:
-    """run_query's per-entry retrieval, verbatim (bit-for-bit parity)."""
+                     p: SimParams, replicas=None) -> None:
+    """run_query's per-entry retrieval, verbatim (bit-for-bit parity).
+
+    ``replicas`` — the plan's (n, r) placement table (None = replication
+    off): a dead owner's items are served by its first alive replica,
+    exactly the scalar reference's fallback."""
     k = p.k
     death, rngs = draws.death, draws.rngs
     for e in range(len(ent_origin)):
         origin = int(ent_origin[e])
         final_owners = np.unique(mown[e, origin])
-        alive_own = death[e, final_owners] > t_merge_done[e]
-        out["m_rt"][e] = 2 * int(alive_own.sum())
+        served = _serving_peers(final_owners, replicas, death[e],
+                                t_merge_done[e])
+        srv = served >= 0
+        out["m_rt"][e] = 2 * int(srv.sum())
         if draws.origin_lat is None:
             lat_o, bw_o = _draw_link(rngs[e], p, len(final_owners))
         else:
-            lat_o = draws.origin_lat[e, final_owners]
+            lat_o = draws.origin_lat[
+                e, np.where(srv, served, final_owners)]
             bw_o = _draw_bw(rngs[e], p, len(final_owners))
         per_owner_counts = np.array(
             [(mown[e, origin] == o).sum() for o in final_owners])
         fetch_bytes = per_owner_counts * p.item_mean_B
-        out["b_rt"][e] = int(out["m_rt"][e] / 2 * p.request_B
-                             + fetch_bytes[alive_own].sum())
+        out["b_rt"][e] = int(srv.sum() * p.request_B
+                             + fetch_bytes[srv].sum())
         t_fetch = (2 * lat_o + (p.request_B + fetch_bytes) / bw_o)
-        t_fetch = t_fetch[alive_own]
+        t_fetch = t_fetch[srv]
         out["response_time_s"][e] = float(
             t_merge_done[e] + (t_fetch.max() if len(t_fetch) else 0.0))
 
         got = mvals[e, origin]              # sorted descending
         inter = np.intersect1d(top_true_all[e], got).size
-        dead_owned = np.isin(mown[e, origin], final_owners[~alive_own])
+        lost_owned = np.isin(mown[e, origin], final_owners[~srv])
         inter = max(0, inter - int(np.isin(
-            mvals[e, origin][dead_owned], top_true_all[e]).sum()))
+            mvals[e, origin][lost_owned], top_true_all[e]).sum()))
         out["accuracy"][e] = inter / k
 
 
 def _retrieval_shared(out: dict, draws: EntryDraws,
                       ent_origin: np.ndarray, t_merge_done: np.ndarray,
                       mvals: np.ndarray, mown: np.ndarray,
-                      top_true_all: np.ndarray, p: SimParams) -> None:
+                      top_true_all: np.ndarray, p: SimParams,
+                      replicas=None) -> None:
     """Shared-stream fast path: the same retrieval model, vectorized over
     all entries at once (draw assignment to owners differs but is
-    i.i.d. — distributionally identical to the scalar path)."""
+    i.i.d. — distributionally identical to the scalar path).
+
+    ``replicas`` — (n, r) placement table (None = replication off): a
+    dead owner's items are served by its first alive replica.  With
+    ``replicas=None`` every expression below reduces bit-for-bit to the
+    replication-free code (``served == mo`` wherever it is read)."""
     E = len(ent_origin)
     k = p.k
     death = draws.death
@@ -1229,29 +1609,43 @@ def _retrieval_shared(out: dict, draws: EntryDraws,
     gv = mvals[ar, ent_origin]                               # (E, k)
     dth = death[ar[:, None], mo]                             # (E, k)
     alive_elem = dth > t_merge_done[:, None]
+    if replicas is None or replicas.shape[1] == 0:
+        served = np.where(alive_elem, mo, -1)
+    else:
+        rep = replicas[np.maximum(mo, 0)]                    # (E, k, r)
+        rep_ok = (rep >= 0) & (death[ar[:, None, None],
+                                     np.maximum(rep, 0)]
+                               > t_merge_done[:, None, None])
+        first = np.take_along_axis(
+            rep, rep_ok.argmax(axis=2)[..., None], axis=2)[..., 0]
+        served = np.where(alive_elem, mo,
+                          np.where(rep_ok.any(axis=2) & (mo >= 0),
+                                   first, -1))
+    srv_elem = served >= 0
     eqm = mo[:, :, None] == mo[:, None, :]                   # (E, k, k)
     count_elem = eqm.sum(axis=2)                 # owner multiplicity
     firstocc = ~(eqm & np.tri(k, k, -1, dtype=bool)[None]).any(axis=2)
-    alive_owner_cnt = (firstocc & alive_elem).sum(axis=1)
-    out["m_rt"][:] = 2 * alive_owner_cnt
-    # Σ_over-alive-owners count_o · item_mean == #elements with a live
-    # owner · item_mean (exact: every term is an integer multiple)
-    fetch_total = alive_elem.sum(axis=1) * p.item_mean_B
-    out["b_rt"][:] = (alive_owner_cnt * p.request_B
+    srv_owner_cnt = (firstocc & srv_elem).sum(axis=1)
+    out["m_rt"][:] = 2 * srv_owner_cnt
+    # Σ_over-served-owners count_o · item_mean == #elements with a
+    # serving peer · item_mean (exact: every term is an integer multiple)
+    fetch_total = srv_elem.sum(axis=1) * p.item_mean_B
+    out["b_rt"][:] = (srv_owner_cnt * p.request_B
                       + fetch_total).astype(np.int64)
     if draws.origin_lat is None:
         lat_o, bw_o = _draw_link(draws.rngs[0], p, (E, k))  # per owner slot
-    else:                        # edge model: owner latency deterministic
-        lat_o = draws.origin_lat[ar[:, None], mo]
+    else:            # edge model: serving-peer latency deterministic
+        lat_o = draws.origin_lat[ar[:, None],
+                                 np.where(srv_elem, served, mo)]
         bw_o = _draw_bw(draws.rngs[0], p, (E, k))
     t_f = 2 * lat_o + (p.request_B + count_elem * p.item_mean_B) / bw_o
-    t_max = np.where(firstocc & alive_elem, t_f, -np.inf).max(axis=1)
+    t_max = np.where(firstocc & srv_elem, t_f, -np.inf).max(axis=1)
     out["response_time_s"][:] = t_merge_done + np.where(
         np.isfinite(t_max), t_max, 0.0)
 
     match = (gv[:, :, None] == top_true_all[:, None, :]).any(axis=2)
     inter = match.sum(axis=1)
-    corr = (match & ~alive_elem).sum(axis=1)
+    corr = (match & ~srv_elem).sum(axis=1)
     out["accuracy"][:] = np.maximum(0, inter - corr) / k
 
 
@@ -1281,10 +1675,10 @@ def run_queries(top: Topology, origins,
        (``QuerySpec(origins=origins, n_trials=n_trials,
        rng="independent")``) — see the README migration table.
     """
-    warnings.warn(
+    _legacy_gate(
         "run_queries is deprecated; use repro.engine.SimEngine with a "
         "QuerySpec(origins=..., n_trials=..., rng=...) — see the README "
-        "migration table", DeprecationWarning, stacklevel=2)
+        "migration table")
     from repro.engine import QuerySpec, SimEngine, policy_from_legacy
     pol = policy_from_legacy(algorithm, strategy, dynamic, lifetime_mean_s)
     spec = QuerySpec(
@@ -1312,11 +1706,10 @@ def run_statistics_heuristic(top: Topology, origin: int,
        rounds land in ``TopKResult.extras``) — see the README migration
        table.
     """
-    warnings.warn(
+    _legacy_gate(
         "run_statistics_heuristic is deprecated; use repro.engine."
         "SimEngine with get_policy('fd-stats').variant(z=z) — rounds "
-        "land in TopKResult.extras; see the README migration table",
-        DeprecationWarning, stacklevel=2)
+        "land in TopKResult.extras; see the README migration table")
     from repro.engine import QuerySpec, SimEngine, get_policy
     res = SimEngine(top, params).run(
         QuerySpec(origins=(int(origin),)),

@@ -70,7 +70,8 @@ def test_sim_engine_independent_streams_entrywise_reference(name):
 
 
 @pytest.mark.parametrize("name", STANDARD)
-def test_sim_engine_matches_legacy_shims(name):
+def test_sim_engine_matches_legacy_shims(name, monkeypatch):
+    monkeypatch.setenv("REPRO_LEGACY_API", "1")   # retired shims re-enabled
     pol = get_policy(name)
     engine = SimEngine(TOP, PA)
     res = engine.run(QuerySpec(origins=(3, 12), n_trials=2), name)
@@ -340,7 +341,8 @@ def test_jax_backend_validation_and_plan_sharing():
 # fd-stats policy (two-round statistics heuristic)
 # --------------------------------------------------------------------------
 
-def test_fd_stats_policy_matches_legacy_and_reduces_traffic():
+def test_fd_stats_policy_matches_legacy_and_reduces_traffic(monkeypatch):
+    monkeypatch.setenv("REPRO_LEGACY_API", "1")   # retired shims re-enabled
     engine = SimEngine(TOP, PA)
     res = engine.run(QuerySpec(origins=(0,)),
                      get_policy("fd-stats").variant(z=0.8))
@@ -449,11 +451,12 @@ def test_query_spec_validation():
                                      seeds=np.zeros((3, 3), np.int64)))
 
 
-def test_no_shared_mutable_params_default():
+def test_no_shared_mutable_params_default(monkeypatch):
     # the old ``params: SimParams = SimParams()`` module-level instance
     # was shared across calls; defaults must now be None
     for fn in (run_query, run_queries, run_query_reference):
         assert inspect.signature(fn).parameters["params"].default is None
+    monkeypatch.setenv("REPRO_LEGACY_API", "1")   # retired shims re-enabled
     m1, _ = run_query(TOP, 0)
     m2, _ = run_query(TOP, 0)
     assert m1 == m2

@@ -19,12 +19,27 @@ import pytest
 from repro.core.fd import comm_bytes
 from repro.core.topology import SCHEDULES, measure_comm_bytes
 from repro.p2psim import (BatchMetrics, SimParams, barabasi_albert,
-                          run_queries, run_query_reference, waxman)
+                          run_query_reference, waxman)
 from repro.p2psim.graph import (as_csr, bfs_tree, bfs_tree_csr,
                                 bfs_tree_csr_multi)
 
 TOP = barabasi_albert(256, m=2, seed=7)
 WAX = waxman(150, seed=3)
+
+
+def run_queries(top, origins, params=None, n_trials=1, *, algorithm="fd",
+                strategy="st1+2", dynamic=True,
+                lifetime_mean_s=float("inf"), seeds=None,
+                independent_streams=False):
+    """The retired ``run_queries`` shim's semantics through the
+    current engine surface (same bits — per-call plan, no caching)."""
+    from repro.engine import QuerySpec, SimEngine, policy_from_legacy
+    pol = policy_from_legacy(algorithm, strategy, dynamic, lifetime_mean_s)
+    spec = QuerySpec(
+        origins=tuple(int(o) for o in np.atleast_1d(np.asarray(origins))),
+        n_trials=n_trials, seeds=seeds,
+        rng="independent" if independent_streams else "shared")
+    return SimEngine(top, params).run(spec, pol).metrics
 
 
 # --------------------------------------------------------------------------

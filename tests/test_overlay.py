@@ -1,0 +1,362 @@
+"""Live overlays: Overlay mutations, incremental NetworkPlan sync
+(bit-exact vs a from-scratch rebuild, all backends, both RNG modes),
+session dynamics, repair policies, and replication."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.engine import (NetworkPlan, Overlay, QuerySpec, SimEngine,
+                          get_policy, registry)
+from repro.p2psim import SimParams, barabasi_albert, waxman
+from repro.p2psim.graph import Topology, bfs_tree, eccentricity_ttl
+from repro.p2psim.overlay import (SessionEvent, apply_events,
+                                  random_session)
+from repro.p2psim.simulate import run_query_reference
+
+PA = SimParams(seed=11)
+_FIELDS = ("m_fw", "m_bw", "m_rt", "b_bw", "b_rt", "response_time_s",
+           "accuracy")
+
+
+def _path_topology(n):
+    nb = [np.array([v for v in (u - 1, u + 1) if 0 <= v < n], np.int32)
+          for u in range(n)]
+    return Topology(n=n, neighbors=nb, kind="path")
+
+
+def _assert_plans_agree(synced_plan, top, origins, *, params=PA,
+                        lifetime_mean_s=30.0, modes=("shared", "independent"),
+                        latency_models=("iid",)):
+    """Engine results off the synced plan == fresh-rebuild plan == the
+    scalar reference, on the numpy AND jax backends, in every RNG mode."""
+    pol = get_policy("fd-dynamic").variant(lifetime_mean_s=lifetime_mean_s)
+    fresh = NetworkPlan(top)
+    engines = [SimEngine(synced_plan, params),
+               SimEngine(fresh, params),
+               SimEngine(synced_plan, params, backend="jax"),
+               SimEngine(fresh, params, backend="jax")]
+    for lm in latency_models:
+        for rng in modes:
+            spec = QuerySpec(origins=tuple(origins), n_trials=2, rng=rng,
+                             latency_model=lm)
+            base = engines[0].run(spec, pol).metrics
+            for eng in engines[1:]:
+                got = eng.run(spec, pol).metrics
+                for f in _FIELDS:
+                    np.testing.assert_array_equal(
+                        getattr(base, f), getattr(got, f),
+                        err_msg=f"{f} ({rng}, {lm}, {eng.backend})")
+    # scalar reference spot check (shared batch-of-1 == reference)
+    o = int(origins[0])
+    ref, _ = run_query_reference(top, o, params, dynamic=True,
+                                 lifetime_mean_s=lifetime_mean_s)
+    one = SimEngine(synced_plan, params).run(
+        QuerySpec(origins=(o,)), pol)
+    assert one.query_metrics(0, 0) == ref
+
+
+# --------------------------------------------------------------------------
+# Overlay mutation API
+# --------------------------------------------------------------------------
+
+def test_overlay_mutations_version_and_journal():
+    top = barabasi_albert(40, m=2, seed=1)
+    ov = Overlay(top)
+    assert ov.version == 0 and ov.n == 40
+    v0 = ov.version
+    former = ov.remove_peer(7)
+    assert ov.degree(7) == 0 and len(former) > 0
+    assert ov.version > v0
+    assert all(not ov.has_edge(7, int(v)) for v in former)
+    pid = ov.add_peer(neighbors=(0, 3))
+    assert pid == 40 and ov.n == 41
+    assert ov.has_edge(pid, 0) and ov.has_edge(pid, 3)
+    deltas = ov.deltas_since(v0)
+    assert deltas[0].op == "remove_peer" and deltas[0].nodes[0] == 7
+    assert [d.version for d in deltas] == sorted(
+        d.version for d in deltas)
+    # the wrapped topology was snapshotted: the caller's is untouched
+    assert len(top.neighbors[7]) > 0 and top.n == 40
+    # sorted-int32 adjacency invariant holds everywhere
+    for a in ov.top.neighbors:
+        assert a.dtype == np.int32 and (np.diff(a) > 0).all()
+
+
+def test_overlay_rejects_invalid_mutations():
+    ov = Overlay(barabasi_albert(20, m=2, seed=0))
+    with pytest.raises(ValueError, match="self-loop"):
+        ov.add_edge(3, 3)
+    if not ov.has_edge(0, 19):
+        ov.add_edge(0, 19)
+    with pytest.raises(ValueError, match="already exists"):
+        ov.add_edge(0, 19)
+    absent = next(v for v in range(1, 20) if not ov.has_edge(0, v))
+    with pytest.raises(ValueError, match="does not exist"):
+        ov.remove_edge(0, absent)
+    with pytest.raises(ValueError, match="out of range"):
+        ov.add_edge(0, 99)
+    with pytest.raises(ValueError, match="no coordinates"):
+        ov.add_peer(neighbors=(0,), coords=(0.1, 0.2))
+
+
+def test_add_peer_coords_on_embedded_topology():
+    ov = Overlay(waxman(30, seed=2))
+    pid = ov.add_peer(neighbors=(0, 1))
+    np.testing.assert_allclose(ov.top.coords[pid],
+                               ov.top.coords[[0, 1]].mean(axis=0))
+    pid2 = ov.add_peer(neighbors=(2,), coords=(0.25, 0.75))
+    np.testing.assert_array_equal(ov.top.coords[pid2], [0.25, 0.75])
+
+
+# --------------------------------------------------------------------------
+# incremental plan sync: edge cases, bit-exact vs rebuild
+# --------------------------------------------------------------------------
+
+def test_sync_noop_and_version_tracking():
+    ov = Overlay(barabasi_albert(60, m=2, seed=3))
+    plan = NetworkPlan(ov)
+    assert plan.overlay is ov and plan.sync() is False
+    ov.add_edge(0, 50) if not ov.has_edge(0, 50) else ov.remove_edge(0, 50)
+    assert plan.sync() is True and plan.version == ov.version
+    assert plan.sync() is False
+
+
+def test_sync_cut_vertex_removal_splits_origin_component():
+    # two BA blobs bridged through one cut vertex
+    a = barabasi_albert(30, m=2, seed=4)
+    nb = [x.copy() for x in a.neighbors]
+    off = 30
+    b = barabasi_albert(30, m=2, seed=5)
+    nb += [(x + off).astype(np.int32) for x in b.neighbors]
+    top = Topology(n=60, neighbors=[np.sort(x) for x in nb], kind="ba")
+    ov = Overlay(top)
+    ov.add_edge(0, 29)      # ensure 29 bridges: 29 <-> 0 and 29 <-> 30+
+    ov.add_edge(29, 30 + 0)
+    plan = NetworkPlan(ov)
+    eng = SimEngine(plan, PA)
+    eng.run(QuerySpec(origins=(0, 45)), "fd-st1+2")       # warm caches
+    ov.remove_peer(29)                                    # the cut vertex
+    plan.sync()
+    _, _, reached = bfs_tree(ov.top, 0, ov.n)
+    assert not reached[45]                  # origin component split
+    _assert_plans_agree(plan, ov.top, (0, 45))
+
+
+def test_sync_removing_the_origin_itself():
+    ov = Overlay(barabasi_albert(50, m=2, seed=6))
+    plan = NetworkPlan(ov)
+    eng = SimEngine(plan, PA)
+    eng.run(QuerySpec(origins=(13,)), "fd-dynamic")       # cache origin 13
+    ov.remove_peer(13)
+    plan.sync()
+    # the tombstoned origin only ever reaches itself
+    res = eng.run(QuerySpec(origins=(13,)), "fd-st1+2")
+    assert res.metrics.n_reached[0, 0] == 1
+    _assert_plans_agree(plan, ov.top, (13, 0))
+
+
+def test_sync_join_shortens_eccentricity_auto_ttl_shrinks():
+    ov = Overlay(_path_topology(10))
+    plan = NetworkPlan(ov)
+    assert plan.auto_ttl(0) == 9
+    pid = ov.add_peer(neighbors=(0, 9))     # shortcut across the path
+    plan.sync()
+    assert plan.auto_ttl(0) == eccentricity_ttl(ov.top, 0) < 9
+    assert plan.auto_ttl(pid) == eccentricity_ttl(ov.top, pid)
+    _assert_plans_agree(plan, ov.top, (0, 5), lifetime_mean_s=float("inf"))
+
+
+def test_sync_interleaved_fuzz_bit_exact_vs_rebuild():
+    ov = Overlay(waxman(90, seed=7))
+    plan = NetworkPlan(ov)
+    eng = SimEngine(plan, PA)
+    rng = np.random.default_rng(0)
+    for round_ in range(4):
+        eng.run(QuerySpec(origins=(0, 33, 70), n_trials=2), "fd-dynamic")
+        events = random_session(ov, int(rng.integers(3, 9)),
+                                seed=100 + round_, join_prob=0.5)
+        apply_events(ov, events, repair="reconnect")
+        assert plan.sync() is True
+        _assert_plans_agree(plan, ov.top, (0, 33, 70),
+                            latency_models=("iid", "edge"))
+
+
+def test_sync_refreshes_edge_latency_tier():
+    # an edge delta that does NOT move any cached BFS tree must still
+    # refresh forward masks + edge_lat (the refresh_edges tier)
+    ov = Overlay(waxman(60, seed=8))
+    plan = NetworkPlan(ov)
+    eng = SimEngine(plan, PA)
+    eng.run(QuerySpec(origins=(0,), latency_model="edge"), "fd-st1+2")
+    # add a non-tree edge between two peers already at equal depth
+    _, depth, _ = bfs_tree(ov.top, 0, ov.n)
+    cand = [(u, v) for u in range(ov.n) for v in range(u + 1, ov.n)
+            if depth[u] == depth[v] and depth[u] >= 1
+            and not ov.has_edge(u, v)]
+    u, v = cand[0]
+    ov.add_edge(u, v)
+    plan.sync()
+    _assert_plans_agree(plan, ov.top, (0,), lifetime_mean_s=float("inf"),
+                        latency_models=("iid", "edge"))
+
+
+def test_patch_tree_skips_bfs_and_matches_fresh_flood(monkeypatch):
+    # a leaf leave + a join are rank-certified: sync must not re-flood
+    # any cached tree, yet land bit-identical to a fresh plan's BFS
+    import repro.engine.plan as planmod
+    ov = Overlay(_path_topology(30))
+    plan = NetworkPlan(ov)
+    plan.origin_statics(np.asarray([3]), 0, "st1+2")
+
+    def boom(*a, **k):
+        raise AssertionError("sync re-flooded a rank-certified delta")
+
+    monkeypatch.setattr(planmod, "bfs_tree_csr_multi", boom)
+    ov.remove_peer(29)                       # tree leaf: childless rule
+    plan.sync()
+    pid = ov.add_peer(neighbors=(0,))        # join: bounded-depth rule
+    plan.sync()
+    monkeypatch.undo()
+    (a,), _ = plan.origin_statics(np.asarray([3]), 0, "st1+2")
+    (b,), _ = NetworkPlan(ov.top).origin_statics(np.asarray([3]), 0,
+                                                 "st1+2")
+    for f in ("parent", "depth", "rank", "idx", "ttl_rem", "kid_sorted",
+              "kid_ptr", "ttl"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+    assert a.depth[pid] == 4 and a.depth[29] == -1
+    _assert_plans_agree(plan, ov.top, (3, pid),
+                        lifetime_mean_s=float("inf"))
+
+
+def test_patch_tree_bails_to_bfs_on_structural_shortcut():
+    # a long-range shortcut re-parents a node WITH tree children — the
+    # certificate cannot cover the cascade, so sync re-floods (and the
+    # re-flood is still bit-exact vs a rebuild)
+    import repro.engine.plan as planmod
+    ov = Overlay(_path_topology(30))
+    plan = NetworkPlan(ov)
+    plan.origin_statics(np.asarray([3]), 0, "st1+2")
+    calls = []
+    real = planmod.bfs_tree_csr_multi
+
+    def spy(*a, **k):
+        calls.append(a)
+        return real(*a, **k)
+
+    planmod.bfs_tree_csr_multi = spy
+    try:
+        ov.add_edge(4, 20)                   # 20 keeps child 21: cascade
+        plan.sync()
+    finally:
+        planmod.bfs_tree_csr_multi = real
+    assert calls, "structural delta must fall back to the BFS sweep"
+    _assert_plans_agree(plan, ov.top, (3,),
+                        lifetime_mean_s=float("inf"))
+
+
+# --------------------------------------------------------------------------
+# session dynamics + repair policies
+# --------------------------------------------------------------------------
+
+def test_random_session_reproducible_and_consistent():
+    ov1 = Overlay(barabasi_albert(40, m=2, seed=9))
+    ov2 = Overlay(barabasi_albert(40, m=2, seed=9))
+    ev1 = random_session(ov1, 20, seed=3)
+    ev2 = random_session(ov2, 20, seed=3)
+    assert ev1 == ev2
+    joined = apply_events(ov1, ev1)
+    assert len(joined) == sum(1 for e in ev1 if e.kind == "join")
+    with pytest.raises(ValueError, match="unknown session event"):
+        apply_events(ov1, [SessionEvent("flap")])
+
+
+def test_repair_reconnect_preserves_connectivity():
+    ov = Overlay(_path_topology(12))
+    ov.remove_peer(6, repair="reconnect")   # interior peer of the path
+    _, _, reached = bfs_tree(ov.top, 0, ov.n)
+    assert reached.sum() == 11              # everyone but the tombstone
+    ov2 = Overlay(_path_topology(12))
+    ov2.remove_peer(6, repair="none")
+    _, _, reached2 = bfs_tree(ov2.top, 0, ov2.n)
+    assert reached2.sum() == 6              # split: only the left half
+
+
+def test_registry_surface_uniform():
+    assert "reconnect" in registry.available_repairs()
+    assert "none" in registry.available_repairs()
+    assert registry.get_repair("reconnect") is not None
+    with pytest.raises(KeyError, match="registered"):
+        registry.get_repair("nope")
+    assert set(registry.available_placements()) >= {"random", "neighbor"}
+    with pytest.raises(KeyError, match="registered"):
+        registry.get_placement("nope")
+    # the pre-existing registries resolve through the same module
+    assert "fd-dynamic" in registry.available_policies()
+    assert "waxman" in registry.available_topologies()
+
+
+# --------------------------------------------------------------------------
+# replication
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("placement", ["random", "neighbor"])
+def test_replication_parity_all_backends(placement):
+    top = barabasi_albert(80, m=2, seed=10)
+    params = dataclasses.replace(PA, replication_factor=2,
+                                 replication_placement=placement)
+    plan = NetworkPlan(top)
+    _assert_plans_agree(plan, top, (0, 11), params=params,
+                        lifetime_mean_s=15.0)
+
+
+def test_replication_improves_accuracy_under_churn():
+    top = barabasi_albert(150, m=2, seed=12)
+    pol = get_policy("fd-dynamic").variant(lifetime_mean_s=8.0)
+    spec = QuerySpec(origins=(0, 9, 33), n_trials=4, rng="independent")
+    accs = {}
+    for r in (0, 3):
+        params = dataclasses.replace(PA, replication_factor=r)
+        accs[r] = SimEngine(top, params).run(spec, pol) \
+            .metrics.accuracy.mean()
+    assert accs[3] >= accs[0]
+    assert accs[0] < 1.0                    # churn actually bites here
+
+
+def test_replication_zero_is_bit_identical_to_default():
+    # r=0 must leave every drawn bit unchanged (placement table unused)
+    top = barabasi_albert(60, m=2, seed=13)
+    pol = get_policy("fd-dynamic").variant(lifetime_mean_s=20.0)
+    spec = QuerySpec(origins=(0, 7), n_trials=2, rng="independent")
+    base = SimEngine(top, PA).run(spec, pol).metrics
+    zero = SimEngine(top, dataclasses.replace(
+        PA, replication_factor=0)).run(spec, pol).metrics
+    for f in _FIELDS:
+        np.testing.assert_array_equal(getattr(base, f), getattr(zero, f))
+
+
+def test_replica_table_cached_and_deterministic():
+    top = barabasi_albert(50, m=2, seed=14)
+    plan = NetworkPlan(top)
+    p2 = dataclasses.replace(PA, replication_factor=2)
+    t1 = plan.replica_table(p2)
+    assert t1.shape == (50, 2) and plan.replica_table(p2) is t1
+    assert plan.replica_table(PA) is None   # r=0: no table
+    # no self-replicas, and a rebuild reproduces the same table
+    assert (t1 != np.arange(50)[:, None]).all()
+    np.testing.assert_array_equal(NetworkPlan(top).replica_table(p2), t1)
+
+
+def test_engine_syncs_live_overlay_between_queries():
+    ov = Overlay(barabasi_albert(70, m=2, seed=15))
+    eng = SimEngine(ov, PA)                 # engine bound to the overlay
+    r1 = eng.run(QuerySpec(origins=(0,)), "fd-st1+2")
+    ov.remove_peer(int(ov.top.neighbors[0][0]))
+    r2 = eng.run(QuerySpec(origins=(0,)), "fd-st1+2")   # auto re-synced
+    assert eng.plan.version == ov.version
+    fresh = SimEngine(NetworkPlan(ov.top), PA).run(
+        QuerySpec(origins=(0,)), "fd-st1+2")
+    assert r2.query_metrics(0, 0) == fresh.query_metrics(0, 0)
+    assert r1.metrics.n_reached[0, 0] >= r2.metrics.n_reached[0, 0]

@@ -5,13 +5,33 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.engine import QuerySpec, SimEngine, get_policy, policy_from_legacy
 from repro.optim.compress import inflate_k
-from repro.p2psim import SimParams, barabasi_albert, run_query, waxman
+from repro.p2psim import SimParams, barabasi_albert, waxman
 from repro.p2psim.graph import bfs_tree, eccentricity_ttl
-from repro.p2psim.simulate import local_topk_scores, run_statistics_heuristic
+from repro.p2psim.simulate import local_topk_scores
 
 TOP = barabasi_albert(600, m=2, seed=7)
 PA = SimParams(seed=11)
+
+
+def run_query(top, origin, params=None, *, algorithm="fd",
+              strategy="st1+2", dynamic=True,
+              lifetime_mean_s=float("inf")):
+    """One scalar query through the engine (the retired ``run_query``
+    shim's semantics — same bits, current API)."""
+    pol = policy_from_legacy(algorithm, strategy, dynamic, lifetime_mean_s)
+    res = SimEngine(top, params).run(QuerySpec(origins=(int(origin),)), pol)
+    return res.metrics.query_metrics(0, 0), None
+
+
+def run_statistics_heuristic(top, origin, params, z):
+    """Engine fd-stats policy, unpacked to the legacy 4-tuple."""
+    res = SimEngine(top, params).run(QuerySpec(origins=(int(origin),)),
+                                     get_policy("fd-stats").variant(z=z))
+    ex = res.extras
+    return (ex["metrics_full"], ex["metrics_pruned"],
+            ex["comm_reduction"], ex["accuracy"])
 
 
 def test_topology_degree():

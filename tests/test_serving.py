@@ -141,8 +141,8 @@ def test_server_serves_bits_identical_to_run():
             zip(results, MIXED_SPECS, MIXED_POLS)):
         _assert_same_bits(res, engine.run(spec, pol), f"request {i}")
         assert res.queue_s >= 0.0
-    assert m["served"] == len(MIXED_SPECS)
-    assert sum(m["batch_hist"].values()) == len(MIXED_SPECS)
+    assert m.served == len(MIXED_SPECS)
+    assert sum(m.batch_hist.values()) == len(MIXED_SPECS)
 
 
 def test_server_sheds_deterministically_at_queue_bound():
@@ -157,7 +157,7 @@ def test_server_sheds_deterministically_at_queue_bound():
     server.start()
     assert all(h.result(timeout=60) is not None for h in handles)
     m = server.metrics()
-    assert m["shed"] == 1 and m["served"] == 4
+    assert m.shed == 1 and m.served == 4
     server.stop()
 
 
@@ -171,7 +171,7 @@ def test_server_times_out_expired_requests_at_dispatch():
         assert h.done() and isinstance(h.exception(), RequestTimeout)
         ok = server.query(QuerySpec(origins=(0,), seed=1), "cn")
         m = server.metrics()
-    assert m["timed_out"] == 1 and m["served"] == 1
+    assert m.timed_out == 1 and m.served == 1
     _assert_same_bits(ok, engine.run(QuerySpec(origins=(0,), seed=1),
                                      "cn"))
 
@@ -207,8 +207,8 @@ def test_server_batches_concurrent_requests_onto_one_sweep():
     results = [h.result(timeout=60) for h in hs]
     m = server.metrics()
     assert max(r.batch_size for r in results) > 1
-    assert m["mean_batch"] > 1.0 and m["max_batch"] > 1
-    assert m["latency"]["p99_s"] >= m["latency"]["p50_s"]
+    assert m.mean_batch > 1.0 and m.max_batch > 1
+    assert m.latency.p99_s >= m.latency.p50_s
     server.stop()
 
 
@@ -243,23 +243,36 @@ def test_server_propagates_engine_errors_to_the_handle():
         with pytest.raises(Exception):
             h.result(timeout=60)
         ok = server.query(QuerySpec(origins=(0,), seed=1), "cn")
-    assert ok is not None and server.metrics()["failed"] == 1
+    assert ok is not None and server.metrics().failed == 1
 
 
 # --------------------------------------------------------------------------
 # deprecated shims
 # --------------------------------------------------------------------------
 
-def test_legacy_shims_emit_deprecation_warnings():
+def test_legacy_shims_raise_without_escape_hatch(monkeypatch):
     from repro.p2psim import (run_queries, run_query,
                               run_statistics_heuristic)
+    monkeypatch.delenv("REPRO_LEGACY_API", raising=False)
+    with pytest.raises(RuntimeError, match="REPRO_LEGACY_API"):
+        run_query(TOP, 0, PA)
+    with pytest.raises(RuntimeError, match="REPRO_LEGACY_API"):
+        run_queries(TOP, [0], PA, 1)
+    with pytest.raises(RuntimeError, match="REPRO_LEGACY_API"):
+        run_statistics_heuristic(TOP, 0, PA, 0.8)
+
+
+def test_legacy_shims_warn_and_delegate_under_escape_hatch(monkeypatch):
+    from repro.p2psim import (run_queries, run_query,
+                              run_statistics_heuristic)
+    monkeypatch.setenv("REPRO_LEGACY_API", "1")
     with pytest.warns(DeprecationWarning, match="SimEngine"):
         met, _ = run_query(TOP, 0, PA)
     with pytest.warns(DeprecationWarning, match="QuerySpec"):
         bm = run_queries(TOP, [0], PA, 1)
     with pytest.warns(DeprecationWarning, match="fd-stats"):
         run_statistics_heuristic(TOP, 0, PA, 0.8)
-    # deprecation must not change bits: shim == engine
+    # the escape hatch must not change bits: shim == engine
     res = SimEngine(TOP, PA).run(QuerySpec(origins=(0,)), "fd-dynamic")
     assert res.query_metrics(0, 0) == met
     np.testing.assert_array_equal(bm.m_fw, res.metrics.m_fw)
