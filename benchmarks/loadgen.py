@@ -159,6 +159,8 @@ def _stage_row(engines, reqs, concurrency: int, backend: str,
         "max_batch": int(m.max_batch),
         "batched_frac": round(batched_frac, 3),
         "shed": m.shed, "timed_out": m.timed_out,
+        "retraced": sum(1 for r in results
+                        if r is not None and r.compile_s > 0),
         "parity": parity, "batched": m.max_batch > 1,
     }
 
@@ -191,23 +193,32 @@ def serving_sweep(fast: bool = False):
         results.append(row)
         assert row["parity"], "served results diverged from run()"
         assert row["batched"], "dynamic batching never fused requests"
-    # jax stage: jitted sweeps retrace per fused batch SHAPE, so the
-    # serving stage keeps shapes stable — one engine, one policy,
-    # single-entry specs, capped max_batch — and a modest request count
-    # amortizes the handful of traces (docs/SERVING.md explains)
+    # jax stage: jitted sweeps are trace-cached per (origin statics,
+    # entry-bucket) — entry batches pad to power-of-two buckets, so
+    # pre-warming each served origin at batch sizes (1, 2, 4) via
+    # QueryServer.warm covers EVERY fused dispatch shape max_batch=4
+    # can produce.  Live dispatches must then retrace nothing
+    # (asserted: retraced == 0, i.e. compile_s == 0 on every request).
     jax_c, jax_n = (8, 32) if fast else (16, 96)
     jax_engines = {"ba": SimEngine(build_topology("ba", n_peers, seed=7),
                                    SimParams(seed=0), backend="jax")}
-    reqs = _mixed_requests(4 * jax_n, n_peers, ("ba",), ("fd-dynamic",),
-                           seed=1)
-    reqs = [r for r in reqs if len(r[0].origins) == 1
-            and r[0].seeds is None][:jax_n]
-    jax_engines["ba"].run(*reqs[0][:2])          # trace batch-of-1
+    rng = np.random.default_rng(1)
+    pool = tuple(int(x) for x in rng.choice(n_peers, 4, replace=False))
+    reqs = [(QuerySpec(origins=(pool[i % len(pool)],),
+                       seed=int(rng.integers(1 << 30))),
+             "fd-dynamic", "ba") for i in range(jax_n)]
+    warm_srv = QueryServer(jax_engines)
+    for o in pool:                               # trace every bucket
+        warm_srv.warm(QuerySpec(origins=(o,), seed=1), "fd-dynamic",
+                      batch_sizes=(1, 2, 4))
     row = _stage_row(jax_engines, reqs, jax_c, "jax", 1, max_batch=4)
     print(f"[serving] jax   c={jax_c:<4d} {row['throughput_qps']:>8.1f} "
           f"qps  mean batch {row['mean_batch']:.2f}  "
-          f"parity={row['parity']} batched={row['batched']}")
+          f"parity={row['parity']} batched={row['batched']} "
+          f"retraced={row['retraced']}")
     assert row["parity"], "jax served results diverged from run()"
+    assert row["retraced"] == 0, \
+        "warmed buckets still retraced at dispatch"
     results.append(row)
     return results
 

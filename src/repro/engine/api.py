@@ -24,6 +24,7 @@ from repro.p2psim.metrics import BatchMetrics, QueryMetrics
 
 RNG_MODES = ("shared", "independent")
 LATENCY_MODELS = ("iid", "edge")
+PRECISIONS = ("f64", "f32", "bf16")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +47,14 @@ class QuerySpec:
     generator, see ``repro.p2psim.topologies``).  ``None`` defers to
     the engine's ``SimParams.latency_model``.
 
+    ``precision`` — ``"f64"`` (default: the bit-exactness contract vs
+    the scalar reference holds), or ``"f32"`` / ``"bf16"`` (jax backend
+    only: the sweep runs in reduced precision and is validated against
+    the f64 reference by a TOLERANCE contract — top-k set recall +
+    score rtol, recorded in ``TopKResult.extras["tolerance"]`` — not
+    bit-exactness).  ``None`` defers to the engine's configured
+    precision.
+
     ``k`` / ``seed`` of None defer to the engine's ``SimParams``.  The
     device backend only reads ``k`` (scores are passed to ``run``).
     """
@@ -57,6 +66,7 @@ class QuerySpec:
     rng: str = "shared"
     seeds: Optional[Any] = None
     latency_model: Optional[str] = None
+    precision: Optional[str] = None
 
     def __post_init__(self):
         """Validate rng / n_trials / latency_model; seeds imply
@@ -71,6 +81,10 @@ class QuerySpec:
             raise ValueError(
                 f"latency_model must be one of {LATENCY_MODELS} (or "
                 f"None to defer to SimParams), got {self.latency_model!r}")
+        if self.precision is not None and self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS} (or None to "
+                f"defer to the engine), got {self.precision!r}")
         if self.seeds is not None and self.rng != "independent":
             object.__setattr__(self, "rng", "independent")
 
@@ -186,6 +200,13 @@ class TopKResult:
     effective link-latency regime) — the sim backends fill them, the
     device backend has no overlay and leaves them ``None``.
 
+    ``precision`` records the arithmetic the executed sweep ran in:
+    ``"f64"`` results are bit-exact vs the scalar reference; ``"f32"``
+    / ``"bf16"`` results are tolerance-checked instead, and
+    ``extras["tolerance"]`` carries the measured contract (top-k
+    recall + score rtol vs the f64 sweep) when the caller requested
+    validation.
+
     Serving metadata (every backend fills these; the serving layer in
     ``repro.engine.serve`` aggregates them into its per-request
     timings):
@@ -214,6 +235,7 @@ class TopKResult:
     backend_used: Optional[str] = None
     topology: Optional[str] = None     # overlay family (sim backends)
     latency_model: Optional[str] = None  # "iid" | "edge" (sim backends)
+    precision: str = "f64"             # arithmetic the sweep ran in
     metrics: Optional[BatchMetrics] = None
     values: Any = None
     indices: Any = None

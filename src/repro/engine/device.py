@@ -19,29 +19,56 @@ import functools
 import time
 from typing import List, Optional, Sequence, Union
 
-from repro.engine.api import (Engine, Policy, QuerySpec, TopKResult,
-                              get_policy)
+from repro.engine.api import (PRECISIONS, Engine, Policy, QuerySpec,
+                              TopKResult, get_policy)
 
 _DEVICE_ALGOS = ("fd", "cn", "cn_star")
 
 
 class DeviceEngine(Engine):
-    """Unified Top-k engine backend over a JAX device mesh."""
+    """Unified Top-k engine backend over a JAX device mesh.
+
+    ``precision``: ``None`` (default) runs the collectives in whatever
+    dtype the caller's score arrays carry — the historical behavior.
+    ``"f64"`` / ``"f32"`` / ``"bf16"`` casts the inputs once before
+    dispatch and records the mode on ``TopKResult.precision`` — the
+    same opt-in surface as ``SimEngine(backend="jax")``.  Note the
+    collectives' local top-k deliberately computes in f32
+    (:mod:`repro.kernels.topk`), so ``"bf16"`` QUANTIZES the scores to
+    bf16 and then merges in f32 — identical bits to casting the scores
+    by hand — and ``"f64"`` needs ``enable_x64`` to survive the
+    initial ``asarray``.
+    """
 
     backend = "device"
 
     def __init__(self, mesh=None, axis: str = "model", *,
                  schedule: str = "halving", batch_axes=None,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 precision: Optional[str] = None):
         """Build the engine (and bind ``mesh`` when given)."""
+        if precision is not None and precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS} (or None), "
+                f"got {precision!r}")
         self.axis = axis
         self.schedule = schedule
         self.batch_axes = batch_axes
         self.use_pallas = use_pallas
+        self.precision = precision
         self.mesh = None
         self._compiled: dict = {}
         if mesh is not None:
             self.prepare(mesh)
+
+    def _cast(self, scores):
+        """Scores in the engine's requested precision (None = as-is)."""
+        if self.precision is None:
+            return scores
+        import jax.numpy as jnp
+
+        from repro.engine.precision import np_dtype
+        return jnp.asarray(scores, np_dtype(self.precision))
 
     def prepare(self, mesh):
         """Bind (or rebind) the device mesh; drops stale compiled fns."""
@@ -108,6 +135,7 @@ class DeviceEngine(Engine):
         if self.mesh is None:
             raise RuntimeError("call DeviceEngine.prepare(mesh) first")
         pols = self._zip_policies(specs, policies)
+        scores = [self._cast(s) for s in scores]
         row_seq = list(rows) if rows is not None else [None] * len(specs)
         if len(scores) != len(specs) or len(row_seq) != len(specs):
             raise ValueError(
@@ -179,6 +207,10 @@ class DeviceEngine(Engine):
     def _result(self, pol: Policy, k: int, scores, vals, idx,
                 got) -> TopKResult:
         """Assemble a TopKResult (+ the comm-model bytes extra)."""
+        # precision=None runs in the caller's dtype; report what ran.
+        prec = self.precision or {
+            "float32": "f32", "bfloat16": "bf16"}.get(
+                str(getattr(vals, "dtype", "")), "f64")
         extras = {}
         n = scores.shape[-1]
         if n % self.axis_size == 0:
@@ -188,4 +220,5 @@ class DeviceEngine(Engine):
                 schedule=self.schedule)
         return TopKResult(policy=pol.name, backend=self.backend, k=k,
                           values=vals, indices=idx, rows=got,
+                          precision=prec,
                           extras=extras)

@@ -46,6 +46,34 @@ from repro.p2psim.overlay import Overlay
 from repro.p2psim.simulate import (SimParams, _OriginStatic,
                                    build_replica_table)
 
+_I32_MAX = np.iinfo(np.int32).max
+
+
+def resolve_index_dtype(n: int, nnz: int, requested: str) -> np.dtype:
+    """Pick (and guard) the plan's index width.
+
+    ``requested="int32"`` raises — a clear error instead of a silent
+    wrap — whenever any indexable quantity exceeds int32: the peer
+    count ``n``, the directed-edge count ``nnz`` (CSR offsets run to
+    nnz), or the *virtual edge space* ``n²`` that a packed int32 edge
+    key would need (the plan keeps packed keys int64 precisely so the
+    common case n > 46340, n² > 2³¹ stays safe — see
+    ``NetworkPlan._compile_topology``).  ``"auto"`` falls back to int64
+    in those cases instead of raising.
+    """
+    wide = int(n) > _I32_MAX or int(nnz) > _I32_MAX
+    if requested == "int64":
+        return np.dtype(np.int64)
+    if requested == "int32":
+        if wide:
+            raise ValueError(
+                f"index_dtype='int32' cannot address this plan: "
+                f"n={n}, directed edges={nnz} (virtual edge space "
+                f"n**2={int(n) * int(n)}) exceed int32's {_I32_MAX}; "
+                "use index_dtype='int64' (or 'auto')")
+        return np.dtype(np.int32)
+    return np.dtype(np.int64 if wide else np.int32)
+
 
 class DepthSlices:
     """Depth-bucketed dense slices + static merge schedule of one tree.
@@ -98,7 +126,8 @@ class DepthSlices:
 
     def __init__(self, st: _OriginStatic, n: int, reroute: bool = False,
                  reuse: Optional[Tuple["DepthSlices",
-                                       _OriginStatic]] = None):
+                                       _OriginStatic]] = None,
+                 index_dtype=np.int64):
         """Compile ``st``'s tree into dense slices + fold schedules.
 
         ``reuse=(old_slices, old_static)`` — incremental-update path:
@@ -107,11 +136,18 @@ class DepthSlices:
         of recompiling (the pure-Python fold schedule dominates the
         cost of a full compile, so reusing untouched levels is what
         makes ``NetworkPlan.sync`` fast; see :meth:`_reusable_levels`).
+
+        ``index_dtype``: dtype of every position/index array (``vv``,
+        gathers, fold-schedule slots, els).  int32 halves the plan's
+        resident footprint and the device transfer at large n; the
+        plan layer picks it only after its overflow guards pass.
         """
         self.n = n
         self.origin = st.origin
         self.reroute = False
         self.dmax = len(st.levels) - 1
+        self.index_dtype = np.dtype(index_dtype)
+        ix = self._ix
         usable = self._reusable_levels(st, reuse)
         self.levels = []
         for d in range(self.dmax + 1):
@@ -120,45 +156,56 @@ class DepthSlices:
                 continue
             vs = st.levels[d]
             L = len(vs)
-            lv = {"vv": vs.astype(np.int64)}
+            lv = {"vv": ix(vs)}
             if d > 0:
-                lv["par_pos"] = np.searchsorted(st.levels[d - 1],
-                                                st.parent[vs])
+                lv["par_pos"] = ix(np.searchsorted(st.levels[d - 1],
+                                                   st.parent[vs]))
             if d < self.dmax:
                 ch = st.levels[d + 1]
                 order = np.argsort(st.parent[ch], kind="stable")
                 cnode = ch[order]
                 cpar = st.parent[ch][order]
-                lv["cnode"] = cnode
-                lv["c_in_next"] = np.searchsorted(ch, cnode)
-                lv["cpar_pos"] = np.searchsorted(vs, cpar)
+                lv["cnode"] = ix(cnode)
+                lv["c_in_next"] = ix(np.searchsorted(ch, cnode))
+                lv["cpar_pos"] = ix(np.searchsorted(vs, cpar))
                 par_nodes = np.unique(cpar)          # ascending
                 n_par = len(par_nodes)
                 par_sel = np.searchsorted(vs, par_nodes)
                 leaf_sel = np.setdiff1d(np.arange(L), par_sel)
-                lv["par_sel"], lv["leaf_sel"] = par_sel, leaf_sel
-                lv["asm_perm"] = np.argsort(
-                    np.concatenate([par_sel, leaf_sel]))
+                lv["par_sel"], lv["leaf_sel"] = ix(par_sel), ix(leaf_sel)
+                lv["asm_perm"] = ix(np.argsort(
+                    np.concatenate([par_sel, leaf_sel])))
                 rounds, ret, segs = self._fold_schedule(
                     np.searchsorted(par_nodes, cpar))
-                lv["rounds"], lv["ret"] = rounds, ret
+                lv["rounds"] = self._ix_rounds(rounds)
+                lv["ret"] = self._ix_ret(ret)
                 # concat-of-retirements order -> parent-ascending order
-                lv["ret_perm"] = np.argsort(segs, kind="stable")
+                lv["ret_perm"] = ix(np.argsort(segs, kind="stable"))
             self.levels.append(lv)
         self._set_els(st)
         if reroute:
             self.extend_reroute(st)
 
+    def _ix(self, a: np.ndarray) -> np.ndarray:
+        return a.astype(self.index_dtype, copy=False)
+
+    def _ix_rounds(self, rounds):
+        return tuple(tuple(self._ix(a) for a in rnd) for rnd in rounds)
+
+    def _ix_ret(self, ret):
+        return tuple(None if idx is None else self._ix(idx)
+                     for idx in ret)
+
     def _set_els(self, st: _OriginStatic) -> None:
         """Adopt ``st``'s forward-phase edge masks (Strategy-1/2 els)."""
         if st.fw_strategy == "basic":
             self.n_els = 0
-            self.els_src = self.els_dst = np.zeros(0, np.int64)
+            self.els_src = self.els_dst = np.zeros(0, self.index_dtype)
             self.cond = np.zeros(0, bool)
         else:
             self.n_els = len(st.fw_els_src)
-            self.els_src = st.fw_els_src
-            self.els_dst = st.fw_els_dst
+            self.els_src = self._ix(st.fw_els_src)
+            self.els_dst = self._ix(st.fw_els_dst)
             self.cond = st.fw_cond
 
     def _reusable_levels(self, st: _OriginStatic, reuse):
@@ -228,8 +275,9 @@ class DepthSlices:
                 np.searchsorted(par_nodes, st.parent[lv["cnode"]]),
                 np.searchsorted(par_nodes, gp)])
             rounds, ret, segs = self._fold_schedule(seg)
-            lv["rr_rounds"], lv["rr_ret"] = rounds, ret
-            lv["rr_ret_perm"] = np.argsort(segs, kind="stable")
+            lv["rr_rounds"] = self._ix_rounds(rounds)
+            lv["rr_ret"] = self._ix_ret(ret)
+            lv["rr_ret_perm"] = self._ix(np.argsort(segs, kind="stable"))
         self.reroute = True
 
     @staticmethod
@@ -504,8 +552,23 @@ class NetworkPlan:
     the caches incrementally whenever the overlay has moved on.
     """
 
-    def __init__(self, top: Union[Topology, Overlay]):
-        """Compile the per-topology state (CSR, edges, latency array)."""
+    def __init__(self, top: Union[Topology, Overlay], *,
+                 index_dtype: str = "auto"):
+        """Compile the per-topology state (CSR, edges, latency array).
+
+        ``index_dtype``: width of the CSR / edge / depth-slice index
+        arrays — ``"int64"`` (the historical default width),
+        ``"int32"`` (halves the index footprint and device transfer;
+        guarded — raises if the plan cannot be addressed in 32 bits),
+        or ``"auto"`` (int32 whenever the guards pass).  The packed
+        ``edge_keys`` stay int64 regardless: their value space is n²,
+        which silently wraps int32 from n = 46341 up.
+        """
+        if index_dtype not in ("auto", "int32", "int64"):
+            raise ValueError(
+                "index_dtype must be 'auto', 'int32' or 'int64', got "
+                f"{index_dtype!r}")
+        self._index_dtype_req = index_dtype
         self.overlay: Optional[Overlay] = None
         if isinstance(top, Overlay):
             self.overlay = top
@@ -522,9 +585,20 @@ class NetworkPlan:
         """(Re)compile the per-topology tier from ``self.top``."""
         top = self.top
         self.indptr, self.indices = as_csr(top)
+        dt = resolve_index_dtype(top.n, len(self.indices),
+                                 self._index_dtype_req)
+        self.index_dtype = dt
+        self.indptr = self.indptr.astype(dt, copy=False)
+        self.indices = self.indices.astype(dt, copy=False)
         self.e_src, self.e_dst = directed_edges(self.indptr, self.indices)
-        self.edge_keys = self.e_src * top.n + self.e_dst  # sorted by constr.
-        self.degrees = np.diff(self.indptr)
+        self.e_src = self.e_src.astype(dt, copy=False)
+        self.e_dst = self.e_dst.astype(dt, copy=False)
+        # packed (src, dst) keys: the value space is n*n — ALWAYS int64,
+        # an int32 key would silently wrap from n = 46341 up
+        self.edge_keys = (self.e_src.astype(np.int64) * top.n
+                          + self.e_dst)                # sorted by constr.
+        # message-count arithmetic accumulates over degrees: keep wide
+        self.degrees = np.diff(self.indptr).astype(np.int64, copy=False)
         # CSR-aligned per-edge latencies (BRITE distance model); None
         # for embeddings-free topologies, which support iid only
         self.edge_lat = (top.edge_latencies(self.e_src, self.e_dst)
@@ -638,7 +712,8 @@ class NetworkPlan:
                         fs, bfs=(P, D, R, K), edge_lat=self.edge_lat)
                 if sl is not None:
                     sl = DepthSlices(new_st, n, reroute=sl.reroute,
-                                     reuse=(sl, st))
+                                     reuse=(sl, st),
+                                     index_dtype=self.index_dtype)
                 st = new_st
             statics[key] = st
             if sl is not None:
@@ -672,8 +747,9 @@ class NetworkPlan:
         key = (st.origin, st.ttl, st.fw_strategy)
         sl = self._slices.get(key)
         if sl is None:
-            sl = self._slices[key] = DepthSlices(st, self.top.n,
-                                                 reroute=reroute)
+            sl = self._slices[key] = DepthSlices(
+                st, self.top.n, reroute=reroute,
+                index_dtype=self.index_dtype)
         elif reroute:
             sl.extend_reroute(st)
         return sl

@@ -49,7 +49,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -341,13 +341,32 @@ class QueryServer:
 
     def warm(self, spec: Optional[QuerySpec] = None,
              policy: Union[str, Policy] = "fd-dynamic",
-             engine: Optional[str] = None, **kwargs) -> TopKResult:
+             engine: Optional[str] = None,
+             batch_sizes: Optional[Sequence[int]] = None,
+             **kwargs) -> TopKResult:
         """Run one query DIRECTLY on an engine (no queue) to populate
         its plan / trace caches before taking load.  Call before
         ``start`` or while the server is idle — engines are owned by
-        the dispatcher thread once traffic flows."""
+        the dispatcher thread once traffic flows.
+
+        ``batch_sizes`` — optionally also pre-trace FUSED dispatch
+        shapes: for each ``b`` the spec is replicated ``b`` times
+        through ``run_many``, exactly the call the dispatcher makes for
+        a coalesced batch of ``b`` identical requests.  The jax backend
+        pads entry batches to power-of-two buckets, so warming
+        ``(1, max_batch)`` covers every batch size in between — live
+        dispatches then report ``compile_s == 0``."""
         name = self._resolve_engine(engine)
-        return self.engines[name].run(spec, policy, **kwargs)
+        eng = self.engines[name]
+        if batch_sizes:
+            res = None
+            base = spec if spec is not None else QuerySpec()
+            for b in batch_sizes:
+                if b < 1:
+                    raise ValueError(f"batch sizes must be >= 1, got {b}")
+                res = eng.run_many([base] * int(b), policy, **kwargs)[-1]
+            return res
+        return eng.run(spec, policy, **kwargs)
 
     def metrics(self) -> ServerMetrics:
         """Snapshot of the serving counters and timing aggregates as a

@@ -23,9 +23,10 @@ from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.engine.api import (Engine, Policy, QuerySpec, TopKResult,
-                              get_policy)
+from repro.engine.api import (PRECISIONS, Engine, Policy, QuerySpec,
+                              TopKResult, get_policy)
 from repro.engine.plan import NetworkPlan
+from repro.engine.precision import check_tolerance
 from repro.p2psim.graph import Topology
 from repro.p2psim.overlay import Overlay
 from repro.p2psim.metrics import QUERY_BYTES, BatchMetrics, QueryMetrics
@@ -76,8 +77,25 @@ class SimEngine(Engine):
         ``TopKResult.backend_used`` and warned about once per engine.
 
     ``use_pallas`` (jax backend only): None = auto (Pallas on TPU, the
-    jnp merge oracle elsewhere); True forces the Pallas kernel, in
+    jnp merge oracle elsewhere); True forces the Pallas kernels, in
     interpret mode off-TPU.
+
+    ``precision`` (jax backend only): ``"f64"`` (default — the
+    bit-exactness contract vs the scalar reference), ``"f32"`` or
+    ``"bf16"`` (the sweeps run end-to-end in reduced precision; the
+    result carries the TOLERANCE contract instead — see
+    :mod:`repro.engine.precision`).  A spec's ``precision`` field
+    overrides the engine default per request.  With
+    ``validate_precision=True`` (default) every reduced-precision
+    execution also runs the f64 sweep and records the measured
+    contract (top-k recall + score rtol) in
+    ``TopKResult.extras["tolerance"]``; benchmarks switch it off to
+    time the reduced sweep alone.
+
+    ``shard`` (jax backend only): run the forward/merge sweep through
+    ``shard_map`` over all local devices on the batch-entry axis —
+    each device holds only its slice of the per-entry working set
+    (how million-peer plans fit in device memory).
     """
 
     backend = "sim"
@@ -85,16 +103,29 @@ class SimEngine(Engine):
     def __init__(self, top: Optional[Union[Topology, NetworkPlan]] = None,
                  params: Optional[SimParams] = None, *,
                  backend: str = "numpy",
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 precision: str = "f64",
+                 validate_precision: bool = True,
+                 shard: bool = False):
         """Build the engine (and compile ``top``'s plan when given)."""
         if backend not in ("numpy", "jax"):
             raise ValueError("backend must be 'numpy' or 'jax', "
                              f"got {backend!r}")
+        if precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got {precision!r}")
+        if backend != "jax" and precision != "f64":
+            raise ValueError(
+                "reduced precision requires backend='jax' — the numpy "
+                "reference sweep is the f64 ground truth")
         self.params = params if params is not None else SimParams()
         self.plan: Optional[NetworkPlan] = None
         self.backend = "sim" if backend == "numpy" else "sim-jax"
         self._backend = backend
         self._use_pallas = use_pallas
+        self._precision = precision
+        self._validate_precision = validate_precision
+        self._shard = shard
         self._warned_fallback = False
         if top is not None:
             self.prepare(top)
@@ -203,8 +234,10 @@ class SimEngine(Engine):
             if not self._coalescable(spec, pol):
                 results[i] = self._execute(spec, pol, p)
                 continue
-            groups.setdefault((pol, p.k, p.latency_model), []).append(i)
-        for (pol, k, lm), idxs in groups.items():
+            prec = spec.precision or self._precision
+            groups.setdefault((pol, p.k, p.latency_model, prec),
+                              []).append(i)
+        for (pol, k, lm, prec), idxs in groups.items():
             if len(idxs) == 1:          # nothing to fuse: direct path
                 i = idxs[0]
                 results[i] = self._execute(
@@ -220,14 +253,21 @@ class SimEngine(Engine):
                 shapes.append((len(spec.origins), spec.n_trials))
             fused = QuerySpec(
                 origins=tuple(int(o) for o in np.concatenate(origins)),
-                n_trials=1, k=k, latency_model=lm,
+                n_trials=1, k=k, latency_model=lm, precision=prec,
                 seeds=np.concatenate(seeds)[:, None])
             res = self._execute(fused, pol,
                                 self._effective(fused, params))
             lo = 0
             for i, (Q, T) in zip(idxs, shapes):
+                hi = lo + Q * T
                 results[i] = dataclasses.replace(
                     res, metrics=_slice_rows(res.metrics, lo, Q, T),
+                    values=(None if res.values is None else
+                            res.values.reshape(-1, k)[lo:hi]
+                            .reshape(Q, T, k)),
+                    indices=(None if res.indices is None else
+                             res.indices.reshape(-1, k)[lo:hi]
+                             .reshape(Q, T, k)),
                     batch_size=len(idxs), extras=dict(res.extras))
                 lo += Q * T
         return results
@@ -241,23 +281,39 @@ class SimEngine(Engine):
             self.plan.sync()              # live overlay: catch up by version
         _latency_mode(self.plan.top, p)   # validate model name + coords
         if pol.algorithm == "fd-stats":
+            if (spec.precision or self._precision) != "f64":
+                raise ValueError(
+                    "fd-stats runs on the scalar reference path, which "
+                    "is f64-only; request precision='f64' (or None)")
             return self._run_stats(spec, pol, p)
 
         origins = np.atleast_1d(np.asarray(spec.origins, dtype=np.int64))
         Q, T = len(origins), spec.n_trials
         ent_seeds = self._entry_seeds(spec, p)
+        prec = spec.precision or self._precision
+        if prec != "f64" and self._backend != "jax":
+            raise ValueError(
+                f"spec requests precision={prec!r} but the numpy backend "
+                "only runs f64 (it IS the ground truth); use "
+                "SimEngine(backend='jax')")
 
         fw_strategy = ("basic" if pol.algorithm in ("cn", "cn_star")
                        else pol.strategy)
+        n_statics = len(self.plan._statics)
         t0 = time.perf_counter()
         sts, st_of_q = self.plan.origin_statics(origins, p.ttl, fw_strategy)
-        compile_s = time.perf_counter() - t0
+        # statics wall counts as compile only when this call actually
+        # BUILT something — a warm plan reports 0.0, so serving-layer
+        # assertions on "no compile on the steady path" hold
+        compile_s = (time.perf_counter() - t0
+                     if len(self.plan._statics) > n_statics else 0.0)
         ent_st = np.repeat(st_of_q, T)
         ent_origin = np.repeat(origins, T)
         # replica placement is retrieval-phase only (FD paths); the CN
         # baselines never enter the owner-fetch fallback
         rep = (None if pol.algorithm in ("cn", "cn_star")
                else self.plan.replica_table(p))
+        extras: dict = {}
         t0 = time.perf_counter()
         if self._backend == "jax":
             from repro.engine.sim_jax import run_entries_jax
@@ -266,7 +322,8 @@ class SimEngine(Engine):
                                   pol.algorithm, pol.dynamic,
                                   pol.lifetime_mean_s, spec.independent,
                                   use_pallas=self._use_pallas,
-                                  replicas=rep)
+                                  replicas=rep, precision=prec,
+                                  shard=self._shard)
             used = "sim-jax"
         else:
             res = _run_entries(sts, ent_st, ent_origin, ent_seeds,
@@ -275,6 +332,25 @@ class SimEngine(Engine):
                                spec.independent, replicas=rep)
             used = "sim"
         run_s = time.perf_counter() - t0
+        compile_s += res.pop("jax_compile_s", 0.0)
+        traces = res.pop("jax_traces", 0)
+        if traces:
+            extras["jax_traces"] = traces
+        vals = res.pop("values", None)
+        owns = res.pop("owners", None)
+        if prec != "f64" and self._validate_precision:
+            # the tolerance contract: rerun the SAME entries in f64 and
+            # measure recall / rtol of the reduced result against it
+            res64 = run_entries_jax(self.plan, sts, ent_st, ent_origin,
+                                    ent_seeds, self.plan.top.n, p,
+                                    pol.algorithm, pol.dynamic,
+                                    pol.lifetime_mean_s, spec.independent,
+                                    use_pallas=self._use_pallas,
+                                    replicas=rep, precision="f64",
+                                    shard=self._shard)
+            report = check_tolerance(prec, vals, owns,
+                                     res64["values"], res64["owners"])
+            extras["tolerance"] = report.summary()
 
         bm = BatchMetrics.empty(pol.algorithm, Q, T)
         n_reached_s = np.array([len(st.idx) for st in sts], np.int64)
@@ -290,7 +366,13 @@ class SimEngine(Engine):
         return TopKResult(policy=pol.name, backend=self.backend, k=p.k,
                           backend_used=used, topology=self.plan.top.kind,
                           latency_model=p.latency_model, metrics=bm,
-                          compile_s=compile_s, run_s=run_s)
+                          precision=prec,
+                          values=(None if vals is None
+                                  else vals.reshape(Q, T, p.k)),
+                          indices=(None if owns is None
+                                   else owns.reshape(Q, T, p.k)),
+                          compile_s=compile_s, run_s=run_s,
+                          extras=extras)
 
     # ---- statistics heuristic (paper §3.3 + Fig 7) ----------------------
 

@@ -3,7 +3,11 @@
 The numpy engine's two hot phases are lowered to XLA:
 
   * the per-depth forward-phase sweep — query arrival times down the
-    BFS tree plus the Strategy-1 "who-sent-first" edge reduction;
+    BFS tree plus the Strategy-1 "who-sent-first" edge reduction; the
+    per-level gather+add and the Appendix-A wait-propagation rule route
+    through ``repro.kernels.sweep`` (jnp oracles by default, Pallas
+    kernels with ``use_pallas=True`` — interpret mode on CPU, Mosaic
+    on TPU);
   * the bottom-up k-list merge — the static fold schedule compiled into
     the plan's :class:`~repro.engine.plan.DepthSlices` executes only
     real pairwise merges (plus odd-slot carries), each one a fused
@@ -18,13 +22,40 @@ Everything stochastic is precomputed in numpy by the SHARED
 reference), and the retrieval / accuracy epilogue is the shared numpy
 code — so this backend is bit-for-bit equal to the numpy backend in
 every RNG mode, and therefore to ``run_query_reference`` wherever the
-numpy backend is (shared batch of one, independent streams).  The
-sweeps trace and run inside ``jaxcompat.enable_x64()``: float64 is what
-makes "same expression" mean "same bits".
+numpy backend is (shared batch of one, independent streams).  With the
+default ``precision="f64"`` the sweeps trace and run inside
+``jaxcompat.enable_x64()``: float64 is what makes "same expression"
+mean "same bits".
 
-The jit cache keys on the tree's level/round size profile plus
-(n_entries, k) — origin identities travel as device-cached index
-arrays, so repeated runs on a prepared plan never recompile.
+Reduced precision (``precision="f32"`` / ``"bf16"``) casts the shared
+numpy draws once on the host and runs the forward sweep and merge
+folds in that dtype end to end — no silent upcast anywhere (the merge
+kernels preserve f32/bf16) — trading the bit contract for the
+tolerance contract checked by :mod:`repro.engine.precision`: top-k
+recall against the f64 ground truth plus an rtol bound on the scores.
+The epilogue containers stay float64 (upcasts are exact), and the
+ground-truth top-k is computed from the CAST scores so value matching
+in the retrieval epilogue stays consistent with what the sweep saw.
+
+Entry batches are padded to the next power of two (the pad rows repeat
+a real entry; rows are independent, outputs are sliced back), so the
+jit cache keys on size buckets instead of exact entry counts — a
+serving workload with mixed fused batch sizes stops retracing per
+shape.  Per-sweep compile time is measured (cache-miss detection via
+the jit cache size) and returned as ``jax_compile_s`` / ``jax_traces``
+so the serving layer can attribute latency honestly.  On accelerators
+the five per-entry draw buffers are donated to the sweep — the level
+arrays they produce replace them instead of doubling resident memory
+across depth levels (donation is a no-op on CPU and is disabled
+there).
+
+``shard=True`` runs the same sweep through ``shard_map`` over all
+local devices on the batch-entry axis (``jaxcompat`` mesh helpers, the
+same compat layer the multi-device :class:`~repro.engine.device`
+collectives are built on): entries are embarrassingly parallel, so
+each device materializes only its slice of the (entries, n) working
+set — that is what lets a million-peer plan's sweep fit when a single
+host's slice would not.
 
 Churn (finite ``lifetime_mean_s``, §4/§5.4) runs end-to-end in the
 same jitted sweep — no numpy fallback:
@@ -46,8 +77,10 @@ same jitted sweep — no numpy fallback:
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import math
+import time
 from typing import Optional
 
 import jax
@@ -56,8 +89,10 @@ import numpy as np
 
 from repro import jaxcompat
 from repro.engine.plan import DepthSlices, NetworkPlan
+from repro.engine.precision import np_dtype
 from repro.kernels.merge.merge import _next_pow2
 from repro.kernels.merge.ops import merge_scorelists
+from repro.kernels.sweep import level_arrivals, wait_propagate
 from repro.p2psim.metrics import ENTRY_BYTES_PAPER
 from repro.p2psim.simulate import (SimParams, _accept_urgent_origin,
                                    _cn_entries, _empty_out,
@@ -189,19 +224,24 @@ def _fold_max(a, lv):
     return _retire(pools, lv["ret"], lv["ret_perm"])
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_pallas",
-                                             "with_st1", "with_churn",
-                                             "with_reroute"))
-def _fd_sweep(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
-              levels, els, rr, *, k, use_pallas, with_st1, with_churn,
-              with_reroute):
+def _fd_sweep_impl(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
+                   levels, els, rr, *, k, use_pallas, with_st1,
+                   with_churn, with_reroute):
     """Forward + merge-and-backward sweeps of one origin's tree.
 
     Per-level functional form: level d's arrays are produced from level
     d±1's by static gathers — nothing is scattered into a global
-    buffer.  Bit-parity contract: every float expression groups exactly
-    as the numpy sweep's; k-lists are padded to K = 2^ceil(log2 k) with
-    -inf tails that never surface in the top k.
+    buffer.  Bit-parity contract (f64): every float expression groups
+    exactly as the numpy sweep's; k-lists are padded to
+    K = 2^ceil(log2 k) with -inf tails that never surface in the top k.
+    In reduced precision every intermediate inherits the input dtype —
+    the literal zero / -inf buffers below are created in the operand
+    dtype precisely so no f32/bf16 value is ever silently upcast.
+
+    The per-level gather+add (forward flood) and the Appendix-A wait
+    rule dispatch through ``repro.kernels.sweep`` — jnp oracles or the
+    Pallas kernels depending on ``use_pallas`` (same bits either way
+    in f64).
 
     Churn (``with_churn``): a peer dead at its would-be send time gets
     ``send = inf`` (its arrival can never release a waiting parent) and
@@ -216,6 +256,7 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
     E = t_exec.shape[0]
     K = _next_pow2(k)
     dmax = len(levels) - 1
+    interp = jax.default_backend() != "tpu"
 
     skip = None
     if with_st1:
@@ -224,11 +265,12 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
         skip = ((send_at[:, els_dst] < send_at[:, els_src])
                 & cond[None, :]).sum(axis=1)
 
-    t_qs = [jnp.zeros((E, 1))]
+    t_qs = [jnp.zeros((E, 1), t_exec.dtype)]
     for d in range(1, dmax + 1):
         lv = levels[d]
-        t_qs.append(t_qs[d - 1][:, lv["par_pos"]]
-                    + dn_term[:, lv["vv"]])
+        t_qs.append(level_arrivals(t_qs[d - 1], dn_term[:, lv["vv"]],
+                                   lv["par_pos"], use_pallas=use_pallas,
+                                   interpret=interp))
 
     send = [None] * (dmax + 1)
     m_v = [None] * (dmax + 1)
@@ -240,17 +282,17 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
         L = vv.shape[0]
         own_ready = t_qs[d] + t_exec[:, vv]
         deadline = t_qs[d] + wt[vv][None, :]
+        death_lv = death[:, vv] if with_churn else None
         own_v = scores[:, vv]
         if K > k:
             own_v = jnp.concatenate(
-                [own_v, jnp.full((E, L, K - k), -jnp.inf)], axis=2)
+                [own_v, jnp.full((E, L, K - k), -jnp.inf, own_v.dtype)],
+                axis=2)
         own_o = jnp.broadcast_to(vv.astype(jnp.int32)[None, :, None],
                                  (E, L, K))
+        a0 = None
         if "cnode" not in lv:                    # all leaves
-            all_in = jnp.zeros((E, L))
-            s = jnp.minimum(jnp.maximum(own_ready, all_in),
-                            jnp.maximum(deadline, own_ready))
-            mv, mo = own_v, own_o
+            all_in = jnp.zeros((E, L), own_ready.dtype)
         else:
             a0 = send[d + 1][:, lv["c_in_next"]] + up_term[:, lv["cnode"]]
             # the parent's send time (needed for the on-time mask)
@@ -258,11 +300,21 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
             # (dead children contribute inf) — mask-free, exactly as
             # numpy computes it
             n_par = lv["ret_perm"].shape[0]
+            am = _fold_max(a0, lv)
             all_in = jnp.concatenate(
-                [_fold_max(a0, lv), jnp.zeros((E, L - n_par))],
+                [am, jnp.zeros((E, L - n_par), am.dtype)],
                 axis=1)[:, lv["asm_perm"]]
-            s = jnp.minimum(jnp.maximum(own_ready, all_in),
-                            jnp.maximum(deadline, own_ready))
+        if with_churn:
+            s, snd = wait_propagate(own_ready, all_in, deadline,
+                                    death=death_lv,
+                                    use_pallas=use_pallas,
+                                    interpret=interp)
+        else:
+            s = wait_propagate(own_ready, all_in, deadline,
+                               use_pallas=use_pallas, interpret=interp)
+        if a0 is None:
+            mv, mo = own_v, own_o
+        else:
             # on-time = arrived by the parent's (raw) send time; a dead
             # child's a0 is inf, so validity is already folded in
             ont = a0 <= s[:, lv["cpar_pos"]]
@@ -292,9 +344,9 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
             mo = jnp.concatenate(
                 [po, own_o[:, lv["leaf_sel"]]], axis=1)[:, lv["asm_perm"]]
         if with_churn:
-            alv = death[:, vv] >= s
+            alv = death_lv >= s
             alive[d] = alv
-            send[d] = jnp.where(alv, s, jnp.inf)
+            send[d] = snd
             m_v[d] = jnp.where(alv[..., None], mv, -jnp.inf)
             m_o[d] = jnp.where(alv[..., None], mo, -1)
         else:
@@ -305,11 +357,57 @@ def _fd_sweep(scores, t_exec, up_term, dn_term, death, wt, tqf, lam,
             tuple(alive) if with_churn else None)
 
 
+_SWEEP_STATICS = ("k", "use_pallas", "with_st1", "with_churn",
+                  "with_reroute")
+
+# buffer donation: each call converts fresh host draws to device
+# buffers; donating the five big per-entry operands lets XLA reuse
+# their memory for the level outputs instead of holding both live
+# across the whole depth loop.  CPU XLA does not implement donation
+# (it would only warn), so it is enabled on accelerators only.
+_fd_sweep = jax.jit(
+    _fd_sweep_impl, static_argnames=_SWEEP_STATICS,
+    donate_argnums=(() if jax.default_backend() == "cpu"
+                    else (0, 1, 2, 3, 4)))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fd_sweep(n_dev: int, k: int, use_pallas: bool,
+                      with_st1: bool, with_churn: bool,
+                      with_reroute: bool):
+    """``_fd_sweep`` sharded over the batch-entry axis on all devices.
+
+    Entries are embarrassingly parallel (each row is one query trial on
+    its own tree), so ``shard_map`` splits every (entries, n) operand
+    across a 1-D device mesh and each device runs the identical sweep
+    on its slice — no collectives needed, and no device ever
+    materializes the full working set.  Static tables (wait budgets,
+    level slices, fold schedules) are replicated; the per-entry draws
+    are split.  Built through the same ``jaxcompat`` mesh/shard_map
+    compat layer as the ``DeviceEngine`` collectives.
+    """
+    P = jax.sharding.PartitionSpec
+    mesh = jaxcompat.make_mesh((n_dev,), ("entries",))
+    ent, rep = P("entries"), P()
+    fn = functools.partial(_fd_sweep_impl, k=k, use_pallas=use_pallas,
+                           with_st1=with_st1, with_churn=with_churn,
+                           with_reroute=with_reroute)
+    in_specs = (ent, ent, ent, ent,          # scores..dn_term
+                ent if with_churn else rep,  # death (or empty stub)
+                rep, rep,                    # wt, tqf
+                ent if with_st1 else rep,    # lam (or empty stub)
+                rep, rep, rep)               # levels, els, rr
+    sharded = jaxcompat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                  out_specs=ent,
+                                  axis_names=("entries",))
+    return jax.jit(sharded)
+
+
 @jax.jit
 def _cn_sweep(t_exec, dn_term, levels):
     """CN / CN* need only the arrival sweep: t_exec_done per level."""
     E = t_exec.shape[0]
-    t_qs = [jnp.zeros((E, 1))]
+    t_qs = [jnp.zeros((E, 1), t_exec.dtype)]
     for d in range(1, len(levels)):
         lv = levels[d]
         t_qs.append(t_qs[d - 1][:, lv["par_pos"]]
@@ -353,8 +451,33 @@ def _device_slices(sl: DepthSlices):
     return cached + (rr,)
 
 
-def _sub(a: np.ndarray, es: np.ndarray, E: int) -> np.ndarray:
-    return a if len(es) == E else a[es]
+def _cache_entries(fn) -> int:
+    """Size of a jitted function's trace cache (-1 when unknowable)."""
+    try:
+        return fn._cache_size()
+    except Exception:
+        return -1
+
+
+def _pad_group(es: np.ndarray, E: int, n_dev: int):
+    """Pad an entry group to its size bucket (next power of two,
+    rounded up to a device-mesh multiple).
+
+    Entry rows are independent, so the pad rows just repeat a real
+    entry and the sweep outputs are sliced back to ``len(es)``; the
+    jit cache then keys on O(log E) bucket sizes instead of every
+    distinct fused batch size the serving layer produces.
+
+    Returns ``(es_run, full)`` — ``full`` means "the group IS the whole
+    batch, in order", letting callers skip the gather entirely.
+    """
+    m = len(es)
+    B = _next_pow2(max(m, 1))
+    if n_dev > 1:
+        B = -(-B // n_dev) * n_dev
+    if B == m:
+        return es, m == E
+    return np.concatenate([es, np.repeat(es[-1:], B - m)]), False
 
 
 def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
@@ -362,12 +485,19 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
                     algorithm: str, dynamic: bool, lifetime_mean_s: float,
                     independent: bool,
                     use_pallas: Optional[bool] = None,
-                    replicas=None) -> dict:
+                    replicas=None, precision: str = "f64",
+                    shard: bool = False) -> dict:
     """Drop-in for the numpy ``_run_entries`` with jitted sweeps.
 
-    Same contract, same outputs, same bits — see the module docstring.
-    Finite ``lifetime_mean_s`` (churn) runs in the same jitted sweep;
-    there is no numpy fallback.
+    Same contract, same outputs — and with the default
+    ``precision="f64"`` the same bits; see the module docstring.
+    ``precision="f32"`` / ``"bf16"`` runs the sweeps in reduced
+    precision (tolerance contract).  ``shard=True`` splits the entry
+    batch across all local devices via ``shard_map``.  Finite
+    ``lifetime_mean_s`` (churn) runs in the same jitted sweep; there
+    is no numpy fallback.  The returned dict carries two scalar
+    side-channels next to the per-entry arrays: ``jax_compile_s`` (wall
+    time of sweep calls that actually traced) and ``jax_traces``.
     """
     churn = not math.isinf(lifetime_mean_s)
     E = len(seeds)
@@ -382,24 +512,60 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
     draws = _precompute_draws(ent_origin, seeds, n, p, algorithm,
                               sts[0].fw_strategy, lifetime_mean_s,
                               independent, par_lat, origin_lat)
-    out = _empty_out(E)
+    out = _empty_out(E, k)
+    out["jax_compile_s"] = 0.0
+    out["jax_traces"] = 0
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+    fp64 = precision == "f64"
+    if fp64:
+        def cast(a):
+            return a
+    else:
+        red_dt = np_dtype(precision)
+
+        def cast(a):
+            return np.asarray(a, red_dt)
+    # f64 needs the x64 flag for "same expression == same bits"; the
+    # reduced modes must NOT enable it — the default f32 lattice is
+    # exactly what keeps their int/float literals narrow
+    x64 = jaxcompat.enable_x64 if fp64 else contextlib.nullcontext
+    n_dev = jax.local_device_count() if shard else 1
+    if n_dev == 1:
+        shard = False
+
+    def _timed(fn, *args, **kw):
+        """Call a jitted sweep; attribute its wall time to compile when
+        the call actually traced (jit cache grew)."""
+        before = _cache_entries(fn)
+        t0 = time.perf_counter()
+        res = fn(*args, **kw)
+        jax.block_until_ready(res)
+        wall = time.perf_counter() - t0
+        after = _cache_entries(fn)
+        if after > before >= 0:
+            out["jax_compile_s"] += wall
+            out["jax_traces"] += after - before
+        return res
 
     # ---- CN / CN*: arrival sweep on device, baseline math shared --------
     if algorithm in ("cn", "cn_star"):
         out["m_fw"][:] = np.array([st.m_basic for st in sts],
                                   np.int64)[ent_st]
         t_ex_done = np.full((E, n), np.inf)
-        with jaxcompat.enable_x64():
-            for s, st in enumerate(sts):
-                es = ent_of_st[s]
+        with x64():
+            for si, st in enumerate(sts):
+                es = ent_of_st[si]
+                es_run, full = _pad_group(es, E, 1)
+                m = len(es)
                 sl = plan.depth_slices(st)
                 levels, _, _ = _device_slices(sl)
-                ted = _cn_sweep(_sub(draws.t_exec, es, E),
-                                _sub(draws.dn_term, es, E), levels)
+                te = draws.t_exec if full else draws.t_exec[es_run]
+                dn = draws.dn_term if full else draws.dn_term[es_run]
+                ted = _timed(_cn_sweep, cast(te), cast(dn), levels)
                 for d, lv in enumerate(sl.levels):
-                    t_ex_done[np.ix_(es, lv["vv"])] = np.asarray(ted[d])
+                    t_ex_done[np.ix_(es, lv["vv"])] = \
+                        np.asarray(ted[d])[:m]
         _cn_entries(out, draws, sts, ent_st, ent_origin, t_ex_done, p,
                     algorithm)
         return out
@@ -410,41 +576,54 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
     mvals = np.empty((E, n, k))
     mown = np.full((E, n, k), -1, np.int32)
     valid = np.zeros((E, n), bool) if churn else None
-    with jaxcompat.enable_x64():
-        for s, st in enumerate(sts):
-            es = ent_of_st[s]
+    with x64():
+        for si, st in enumerate(sts):
+            es = ent_of_st[si]
+            m = len(es)
+            es_run, full = _pad_group(es, E, n_dev)
             sl = plan.depth_slices(st, reroute=with_reroute)
             levels, els, rr = _device_slices(sl)
             with_st1 = st.fw_strategy != "basic"
-            tqf = lam = np.zeros(0)
+
+            def _take(a):
+                return a if full else a[es_run]
+            tqf = lam = cast(np.zeros(0))
             if with_st1:
-                tqf = np.where(st.depth >= 0, st.depth * p.t_qsnd_s,
-                               np.inf)
-                lam = _sub(draws.lam, es, E)
-            death = _sub(draws.death, es, E) if churn else np.zeros(0)
-            send_d, mv_d, mo_d, skip, alive_d = _fd_sweep(
-                _sub(draws.scores, es, E), _sub(draws.t_exec, es, E),
-                _sub(draws.up_term, es, E), _sub(draws.dn_term, es, E),
-                death, wait_time(st.ttl_rem, p), tqf, lam, levels, els,
-                rr if with_reroute else None,
-                k=k, use_pallas=bool(use_pallas), with_st1=with_st1,
-                with_churn=churn, with_reroute=with_reroute)
+                tqf = cast(np.where(st.depth >= 0,
+                                    st.depth * p.t_qsnd_s, np.inf))
+                lam = cast(_take(draws.lam))
+            death = cast(_take(draws.death)) if churn else cast(
+                np.zeros(0))
+            if shard:
+                fd = _sharded_fd_sweep(n_dev, k, bool(use_pallas),
+                                       with_st1, churn, with_reroute)
+                kw = {}
+            else:
+                fd = _fd_sweep
+                kw = dict(k=k, use_pallas=bool(use_pallas),
+                          with_st1=with_st1, with_churn=churn,
+                          with_reroute=with_reroute)
+            send_d, mv_d, mo_d, skip, alive_d = _timed(
+                fd, cast(_take(draws.scores)), cast(_take(draws.t_exec)),
+                cast(_take(draws.up_term)), cast(_take(draws.dn_term)),
+                death, cast(wait_time(st.ttl_rem, p)), tqf, lam,
+                levels, els, rr if with_reroute else None, **kw)
             for d, lv in enumerate(sl.levels):
                 rows = np.ix_(es, lv["vv"])
-                send_t[rows] = np.asarray(send_d[d])
-                mvals[rows] = np.asarray(mv_d[d])
-                mown[rows] = np.asarray(mo_d[d])
+                send_t[rows] = np.asarray(send_d[d])[:m]
+                mvals[rows] = np.asarray(mv_d[d])[:m]
+                mown[rows] = np.asarray(mo_d[d])[:m]
                 if churn:
-                    valid[rows] = np.asarray(alive_d[d])
+                    valid[rows] = np.asarray(alive_d[d])[:m]
             out["m_fw"][es] = (st.fw_static + sl.n_els
-                               - np.asarray(skip, np.int64)
+                               - np.asarray(skip, np.int64)[:m]
                                if with_st1 else st.m_basic)
 
     # every reached peer that is still alive at its send time sends its
     # list exactly once (without churn that is everyone but the origin)
     if churn:
-        for s, st in enumerate(sts):
-            es = ent_of_st[s]
+        for si, st in enumerate(sts):
+            es = ent_of_st[si]
             n_alive = valid[np.ix_(es, st.idx)].sum(axis=1)
             out["m_bw"][es] += n_alive - 1        # origin never dies
             out["b_bw"][es] += (n_alive - 1) * list_bytes
@@ -457,8 +636,8 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
     urgent: list = [[] for _ in range(E)]
     if dynamic:
         hop_term = p.latency_mean_s + list_bytes / p.bw_mean_Bps
-        for s, st in enumerate(sts):
-            es = ent_of_st[s]
+        for si, st in enumerate(sts):
+            es = ent_of_st[si]
             ch = st.kid_sorted
             if len(ch) == 0:
                 continue
@@ -482,16 +661,25 @@ def run_entries_jax(plan: NetworkPlan, sts, ent_st: np.ndarray,
 
     # ---- §4.2 reroute accounting: one message per accepted list ---------
     if with_reroute:
-        for s, st in enumerate(sts):
-            es = ent_of_st[s]
+        for si, st in enumerate(sts):
+            es = ent_of_st[si]
             cnt = _reroute_counts(st, valid[es])
             out["m_bw"][es] += cnt
             out["b_bw"][es] += cnt * list_bytes
 
-    top_true_all = _true_topk_by_origin(draws.scores, sts, ent_of_st, k)
+    # ground truth from the scores AS THE SWEEP SAW THEM (cast once,
+    # compared in f64 — the upcast is exact): reduced-precision runs
+    # must value-match the retrieval epilogue against cast scores, and
+    # in f64 this is the identical array
+    truth_scores = (draws.scores if fp64
+                    else cast(draws.scores).astype(np.float64))
+    top_true_all = _true_topk_by_origin(truth_scores, sts, ent_of_st, k)
     t_merge_done = send_t[np.arange(E), ent_origin] + p.merge_s
     _accept_urgent_origin(urgent, ent_origin, t_merge_done, mvals, mown,
                           valid, k)
+    ar = np.arange(E)
+    out["values"] = mvals[ar, ent_origin]
+    out["owners"] = mown[ar, ent_origin].astype(np.int64)
     if draws.exact:
         _retrieval_exact(out, draws, ent_origin, t_merge_done, mvals,
                          mown, top_true_all, p, replicas)

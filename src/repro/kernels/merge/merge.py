@@ -116,7 +116,12 @@ def merge_pallas(vals_a, idx_a, vals_b, idx_b, *, interpret: bool = True,
     lead = vals_a.shape[:-1]
     k = vals_a.shape[-1]
     m = 2 * _next_pow2(k)
-    dt = jnp.promote_types(jnp.result_type(vals_a, vals_b), jnp.float32)
+    dt = jnp.result_type(vals_a, vals_b)
+    if not jnp.issubdtype(dt, jnp.floating) or dt == jnp.float16:
+        # non-float / f16 inputs keep the historical f32 compute dtype;
+        # f64, f32 and bf16 lists merge in their OWN dtype (the
+        # reduced-precision sweep must not silently upcast bf16)
+        dt = jnp.promote_types(dt, jnp.float32)
     va = vals_a.reshape((-1, k))
     b = va.shape[0]
     args = [va, idx_a.reshape((-1, k)), vals_b.reshape((-1, k)),

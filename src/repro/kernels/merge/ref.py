@@ -27,9 +27,12 @@ def merge_ref(vals_a, idx_a, vals_b, idx_b, k: int | None = None,
         vals_a = jnp.where(valid_a[..., None], vals_a, -jnp.inf)
     if valid_b is not None:
         vals_b = jnp.where(valid_b[..., None], vals_b, -jnp.inf)
-    # float64 lists (the x64 simulator sweep) merge in float64; anything
-    # narrower keeps the historical float32 compute dtype
-    dt = jnp.promote_types(jnp.result_type(vals_a, vals_b), jnp.float32)
+    # float lists merge in their OWN dtype (f64 for the x64 sweep, f32 /
+    # bf16 for the reduced-precision mode — no silent upcast); non-float
+    # and f16 inputs keep the historical float32 compute dtype
+    dt = jnp.result_type(vals_a, vals_b)
+    if not jnp.issubdtype(dt, jnp.floating) or dt == jnp.float16:
+        dt = jnp.promote_types(dt, jnp.float32)
     v = jnp.concatenate([vals_a, vals_b], axis=-1).astype(dt)
     i = jnp.concatenate([idx_a, idx_b], axis=-1)
     mv, pos = jax.lax.top_k(v, k)

@@ -1,0 +1,4 @@
+from repro.kernels.sweep.ops import level_arrivals, wait_propagate  # noqa: F401
+from repro.kernels.sweep.ref import arrivals_ref, wait_ref  # noqa: F401
+from repro.kernels.sweep.sweep import (arrivals_pallas,  # noqa: F401
+                                       wait_pallas)

@@ -1,0 +1,37 @@
+"""jnp oracles for the per-depth forward-sweep kernels.
+
+These are the EXACT expressions ``repro.engine.sim_jax._fd_sweep`` has
+always used — extracted verbatim so the Pallas kernels in
+:mod:`repro.kernels.sweep.sweep` have a bit-parity reference: same
+gather-then-add grouping for arrivals, same min/max grouping for the
+Appendix-A wait rule.  Dtypes are preserved (f64 under ``enable_x64``,
+f32 / bf16 in the reduced-precision mode) — no silent upcasts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def arrivals_ref(tq_prev, dn, par_pos):
+    """Level-d query arrival times from level d-1's.
+
+    ``tq_prev`` — (E, L_prev) arrival times of the parent level;
+    ``dn`` — (E, L) this level's downstream link terms (already gathered
+    to level order); ``par_pos`` — (L,) each node's parent position
+    inside the parent level.  Returns (E, L):
+    ``tq_prev[:, par_pos] + dn`` — the fused gather+add of the forward
+    flood.
+    """
+    return tq_prev[:, par_pos] + dn
+
+
+def wait_ref(own_ready, all_in, deadline):
+    """Appendix-A send-time rule, elementwise over (E, L).
+
+    ``s = min(max(own_ready, all_in), max(deadline, own_ready))`` — a
+    peer sends when its own execution AND every child arrival are in,
+    capped by its TTL deadline, but never before its own list is ready.
+    The grouping matches the numpy sweep exactly (bit-parity in f64).
+    """
+    return jnp.minimum(jnp.maximum(own_ready, all_in),
+                       jnp.maximum(deadline, own_ready))

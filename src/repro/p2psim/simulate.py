@@ -1277,7 +1277,7 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
         t_q[ee, vv] = t_q[ee, pp] + dn_term[ee, vv]
     t_ex_done = t_q + t_exec
 
-    out = _empty_out(E)
+    out = _empty_out(E, k)
     m_basic_arr = np.array([st.m_basic for st in sts], np.int64)
 
     # ---- CN / CN* baselines --------------------------------------------
@@ -1437,6 +1437,9 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     t_merge_done = send_t[np.arange(E), ent_origin] + p.merge_s
     _accept_urgent_origin(urgent, ent_origin, t_merge_done, mvals, mown,
                           None if no_churn else valid, k)
+    ar = np.arange(E)
+    out["values"] = mvals[ar, ent_origin]
+    out["owners"] = mown[ar, ent_origin].astype(np.int64)
     if draws.exact:
         _retrieval_exact(out, draws, ent_origin, t_merge_done, mvals,
                          mown, top_true_all, p, replicas)
@@ -1446,11 +1449,16 @@ def _run_entries(sts, ent_st: np.ndarray, ent_origin: np.ndarray,
     return out
 
 
-def _empty_out(E: int) -> dict:
+def _empty_out(E: int, k: Optional[int] = None) -> dict:
     out = {f: np.zeros(E, np.int64)
            for f in ("m_fw", "m_bw", "m_rt", "b_bw", "b_rt")}
     out["response_time_s"] = np.zeros(E)
     out["accuracy"] = np.zeros(E)
+    if k is not None:
+        # the origin's merged k-list (descending values + owning peers)
+        # — what the precision tolerance contract compares across runs
+        out["values"] = np.full((E, k), -np.inf)
+        out["owners"] = np.full((E, k), -1, np.int64)
     return out
 
 
@@ -1494,6 +1502,15 @@ def _cn_entries(out: dict, draws: EntryDraws, sts, ent_st: np.ndarray,
         delivered[senders] = True
         delivered[origin] = True
         out["accuracy"][e] = _accuracy(scores[e], idx, delivered, k)
+        if "values" in out:
+            # the origin's collected k-list: top-k over every delivered
+            # peer's items (the origin always delivers to itself)
+            didx = idx[delivered[idx]]
+            sc = scores[e][didx].reshape(-1)
+            top = np.argpartition(sc, -k)[-k:]
+            top = top[np.argsort(sc[top])[::-1]]
+            out["values"][e] = sc[top]
+            out["owners"][e] = didx[top // k]
 
 
 def _true_topk_by_origin(scores: np.ndarray, sts, ent_of_st,

@@ -21,6 +21,9 @@ import pytest
 
 try:                                               # pragma: no cover
     import hypothesis                              # noqa: F401
+    # Deterministic CI profile — selected with --hypothesis-profile=ci.
+    hypothesis.settings.register_profile(
+        "ci", derandomize=True, max_examples=40, deadline=None)
 except ImportError:                                # build the stub
     class _Integers:
         def __init__(self, lo, hi):
@@ -29,11 +32,25 @@ except ImportError:                                # build the stub
         def draw(self, rnd):
             return rnd.randint(self.lo, self.hi)
 
-    def _settings(max_examples=100, deadline=None, **_ignored):
-        def deco(fn):
-            fn._stub_max_examples = max_examples
+    class _settings:
+        """Stub settings: decorator + no-op profile registry (the CI
+        step passes ``--hypothesis-profile=ci``, which only the real
+        package's pytest plugin consumes)."""
+
+        def __init__(self, max_examples=100, deadline=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._stub_max_examples = self.max_examples
             return fn
-        return deco
+
+        @staticmethod
+        def register_profile(*_a, **_k):
+            pass
+
+        @staticmethod
+        def load_profile(*_a, **_k):
+            pass
 
     def _given(**strats):
         def deco(fn):

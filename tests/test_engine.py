@@ -524,3 +524,73 @@ except ValueError:
 print("DEVICE_ENGINE_OK")
 """)
     assert "DEVICE_ENGINE_OK" in out
+
+
+# --------------------------------------------------------------------------
+# shard_map-sharded sim sweep + DeviceEngine precision (ISSUE 10)
+# --------------------------------------------------------------------------
+
+def test_sharded_sim_sweep_matches_numpy_bits(devices8):
+    """``SimEngine(backend="jax", shard=True)`` partitions the entry
+    batch over the device mesh via the jaxcompat shard_map layer and
+    must keep the f64 bit contract — and the reduced-precision
+    tolerance contract — intact across 8 devices."""
+    out = devices8("""
+import jax, numpy as np
+from repro.engine import SimEngine, QuerySpec
+from repro.p2psim import SimParams, barabasi_albert
+
+assert jax.local_device_count() == 8
+top = barabasi_albert(150, m=2, seed=3)
+p = SimParams(k=5, seed=7)
+spec = QuerySpec(origins=(0, 9, 23), n_trials=4, seed=7,
+                 rng="independent")           # 12 entries over 8 devices
+fields = ("m_fw", "m_bw", "m_rt", "b_fw", "b_bw", "b_rt",
+          "response_time_s", "accuracy")
+for pol in ("fd-basic", "fd-st1", "fd-dynamic"):
+    rn = SimEngine(top, p).run(spec, pol)
+    rs = SimEngine(top, p, backend="jax", shard=True).run(spec, pol)
+    assert rs.backend_used == "sim-jax", pol
+    for f in fields:
+        np.testing.assert_array_equal(
+            getattr(rn.metrics, f), getattr(rs.metrics, f),
+            err_msg=f"shard {pol}: {f}")
+rs32 = SimEngine(top, p, backend="jax", shard=True,
+                 precision="f32").run(spec, "fd-dynamic")
+tol = rs32.extras["tolerance"]
+assert tol["ok"], tol
+print("SHARDED_SWEEP_OK")
+""")
+    assert "SHARDED_SWEEP_OK" in out
+
+
+def test_device_engine_precision_modes(devices8):
+    out = devices8("""
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.engine import DeviceEngine, QuerySpec
+from repro.jaxcompat import make_mesh
+
+mesh = make_mesh((8,), ("model",))
+scores = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+spec = QuerySpec(k=10)
+res = DeviceEngine(mesh).run(spec, "fd-dynamic", scores=scores)
+assert res.precision == "f32"             # caller dtype, honestly reported
+rb = DeviceEngine(mesh, precision="bf16").run(spec, "fd-dynamic",
+                                              scores=scores)
+# the collectives' local top-k computes in f32 (repro.kernels.topk),
+# so the bf16 mode quantizes inputs; the requested mode is recorded
+assert rb.precision == "bf16" and rb.values.dtype == jnp.float32
+# bf16 engine == casting the scores by hand
+rc = DeviceEngine(mesh).run(spec, "fd-dynamic",
+                            scores=scores.astype(jnp.bfloat16))
+np.testing.assert_array_equal(np.asarray(rb.values, np.float32),
+                              np.asarray(rc.values, np.float32))
+try:
+    DeviceEngine(mesh, precision="f8")
+    raise SystemExit("bad precision must raise")
+except ValueError:
+    pass
+print("DEVICE_PRECISION_OK")
+""")
+    assert "DEVICE_PRECISION_OK" in out

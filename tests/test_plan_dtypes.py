@@ -1,0 +1,138 @@
+"""NetworkPlan index widths: int32 CSR / depth slices, overflow guards.
+
+The plan's CSR offsets, edge endpoints and depth-slice gather indices
+are ``int32`` whenever the plan fits (halved index footprint on
+device), ``int64`` on request or when it doesn't.  The guards must be
+LOUD: an explicit ``index_dtype="int32"`` on a plan that cannot be
+addressed in 32 bits raises a clear error instead of silently
+wrapping, and the packed ``edge_keys`` stay int64 unconditionally
+(their value space is n², which wraps int32 from n = 46341).
+Degenerate shapes — a single isolated peer, a star, a chain at maximum
+depth — must run identically under both widths and both backends.
+"""
+import numpy as np
+import pytest
+
+from repro.engine import SimEngine
+from repro.engine.api import QuerySpec
+from repro.engine.plan import NetworkPlan, resolve_index_dtype
+from repro.p2psim.graph import Topology
+from repro.p2psim.simulate import SimParams
+
+I32_MAX = np.iinfo(np.int32).max
+
+
+def _top(adj, kind):
+    return Topology(
+        n=len(adj),
+        neighbors=[np.array(sorted(a), np.int32) for a in adj],
+        kind=kind)
+
+
+def _star(n):
+    adj = [set(range(1, n))] + [{0} for _ in range(n - 1)]
+    return _top(adj, "star")
+
+
+def _chain(n):
+    adj = [set() for _ in range(n)]
+    for i in range(n - 1):
+        adj[i].add(i + 1)
+        adj[i + 1].add(i)
+    return _top(adj, "chain")
+
+
+# -- resolve_index_dtype guards -------------------------------------------
+
+def test_resolve_auto_picks_narrow_then_wide():
+    assert resolve_index_dtype(1000, 4000, "auto") == np.int32
+    assert resolve_index_dtype(I32_MAX + 1, 10, "auto") == np.int64
+    assert resolve_index_dtype(10, I32_MAX + 1, "auto") == np.int64
+    assert resolve_index_dtype(1000, 4000, "int64") == np.int64
+
+
+@pytest.mark.parametrize("n,nnz", [(I32_MAX + 1, 100),
+                                   (100, I32_MAX + 1)])
+def test_resolve_int32_overflow_raises_clearly(n, nnz):
+    """>2^31 peers or directed edges under an explicit int32 request is
+    a clear ValueError naming the quantities — never a silent wrap."""
+    with pytest.raises(ValueError) as ei:
+        resolve_index_dtype(n, nnz, "int32")
+    msg = str(ei.value)
+    assert "int32" in msg and "virtual edge space" in msg
+    assert str(n) in msg
+
+
+def test_plan_rejects_bad_dtype_name():
+    with pytest.raises(ValueError, match="index_dtype"):
+        NetworkPlan(_star(4), index_dtype="int16")
+
+
+# -- plan array widths ----------------------------------------------------
+
+@pytest.mark.parametrize("req,want", [("auto", np.int32),
+                                      ("int32", np.int32),
+                                      ("int64", np.int64)])
+def test_plan_index_arrays_take_requested_width(req, want):
+    plan = NetworkPlan(_star(50), index_dtype=req)
+    assert plan.index_dtype == want
+    for arr in (plan.indptr, plan.indices, plan.e_src, plan.e_dst):
+        assert arr.dtype == want
+    # packed keys and message-count accumulators stay wide regardless
+    assert plan.edge_keys.dtype == np.int64
+    assert plan.degrees.dtype == np.int64
+    sts, _ = plan.origin_statics(np.array([0]), plan.auto_ttl(0), "basic")
+    sl = plan.depth_slices(sts[0])
+    assert sl.index_dtype == want
+    for d, lv in enumerate(sl.levels):
+        assert lv["vv"].dtype == want
+        if d > 0:                          # the root level has no parent
+            assert lv["par_pos"].dtype == want
+
+
+def test_edge_keys_stay_int64_past_the_wrap_point():
+    """n = 46342 > sqrt(2^31): a packed int32 key would wrap negative.
+    The plan's keys must stay int64, unique and non-negative even on an
+    int32-indexed plan."""
+    n = 46342
+    plan = NetworkPlan(_star(n), index_dtype="int32")
+    assert plan.index_dtype == np.int32           # n, nnz both fit
+    assert plan.edge_keys.dtype == np.int64
+    assert int(plan.edge_keys.max()) > I32_MAX    # would have wrapped
+    assert int(plan.edge_keys.min()) >= 0
+    assert len(np.unique(plan.edge_keys)) == len(plan.edge_keys)
+
+
+# -- degenerate shapes under both widths ----------------------------------
+
+def _run(top, index_dtype, backend, policy="fd-dynamic"):
+    plan = NetworkPlan(top, index_dtype=index_dtype)
+    eng = SimEngine(plan, SimParams(k=3, seed=11), backend=backend)
+    return eng.run(QuerySpec(origins=(0,), n_trials=2), policy)
+
+
+@pytest.mark.parametrize("make,policy", [
+    (lambda: _star(9), "fd-dynamic"),
+    (lambda: _star(9), "cn"),
+    (lambda: _chain(12), "fd-st1"),      # auto-TTL = 11: max depth
+    (lambda: _chain(12), "fd-basic"),
+])
+def test_degenerate_plans_run_identically_both_widths(make, policy):
+    runs = {}
+    for dt in ("int32", "int64"):
+        for backend in ("numpy", "jax"):
+            runs[(dt, backend)] = _run(make(), dt, backend, policy)
+    base = runs[("int64", "numpy")]
+    for key, res in runs.items():
+        for f in ("m_fw", "m_bw", "m_rt", "response_time_s", "accuracy"):
+            np.testing.assert_array_equal(
+                getattr(res.metrics, f), getattr(base.metrics, f),
+                err_msg=f"{key} {f}")
+
+
+def test_single_peer_plan_both_widths():
+    """One isolated peer: the origin answers from its own store."""
+    for dt in ("int32", "int64"):
+        res = _run(_top([set()], "single"), dt, "numpy")
+        assert res.k == 3
+        assert np.isfinite(res.metrics.response_time_s).all()

@@ -237,6 +237,31 @@ def test_server_warm_populates_plan_before_load():
     server.stop()
 
 
+def test_warm_batch_sizes_pretrace_fused_buckets():
+    """``warm(batch_sizes=...)`` pre-traces the power-of-two dispatch
+    buckets on the jax backend, so COALESCED live dispatches retrace
+    nothing: every served result reports ``compile_s == 0`` and no new
+    jax traces."""
+    engine = SimEngine(JTOP, PA, backend="jax")
+    server = QueryServer(engine, ServerConfig(batch_window_s=0.05))
+    spec = QuerySpec(origins=(0,), seed=1)
+    warmed = server.warm(spec, "fd-dynamic", batch_sizes=(1, 8))
+    assert warmed.batch_size == 8
+    # backlog submitted before start -> one coalesced dispatch.  All
+    # requests hit the warmed origin: bucket-warming covers the FUSED
+    # BATCH SHAPES; a brand-new origin still (correctly) pays its own
+    # statics compile.
+    hs = [server.submit(QuerySpec(origins=(0,), seed=i), "fd-dynamic")
+          for i in range(5)]
+    server.start()
+    results = [h.result(timeout=120) for h in hs]
+    server.stop()
+    assert max(r.batch_size for r in results) > 1     # really coalesced
+    for r in results:
+        assert r.compile_s == 0, (r.batch_size, r.compile_s)
+        assert "jax_traces" not in r.extras
+
+
 def test_server_propagates_engine_errors_to_the_handle():
     with QueryServer(SimEngine(TOP, PA)) as server:
         h = server.submit(QuerySpec(origins=(10 ** 9,), seed=1), "cn")
